@@ -1,0 +1,81 @@
+"""Paper Fig.6: DNN inference-time CDF under Solo / Co-Sched / RT-Gang on
+the real gang executor (DAVE-2 as the RT gang; memory + cpu parallel
+best-effort jobs like lbm/cutcp)."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.deeppicar import Dave2Config
+from repro.core.executor import BEJob, GangExecutor, RTJob
+from repro.models.dave2 import make_dave2
+
+
+def percentiles(xs):
+    xs = np.asarray(xs) * 1e3
+    if len(xs) == 0:
+        return {}
+    return {"p50_ms": round(float(np.percentile(xs, 50)), 3),
+            "p95_ms": round(float(np.percentile(xs, 95)), 3),
+            "p99_ms": round(float(np.percentile(xs, 99)), 3),
+            "max_ms": round(float(np.max(xs)), 3),
+            "n": len(xs)}
+
+
+def run(duration=6.0, period_s=0.020):
+    cfg = Dave2Config()
+    params, fn = make_dave2(cfg)
+    img = jnp.ones((1, *cfg.input_hw, 3), jnp.float32)
+    fn(params, img).block_until_ready()         # compile
+
+    mem = jnp.ones((1536, 1536), jnp.float32)
+    mem_fn = jax.jit(lambda a: (a @ a).sum())
+    mem_fn(mem).block_until_ready()
+    cpu_fn = jax.jit(lambda x: jnp.sin(x).sum())
+    cpu_arr = jnp.ones((4096,), jnp.float32)
+    cpu_fn(cpu_arr).block_until_ready()
+
+    def dnn_quantum(lane, idx):
+        fn(params, img).block_until_ready()
+
+    def mem_quantum(lane):
+        mem_fn(mem).block_until_ready()
+
+    def cpu_quantum(lane):
+        cpu_fn(cpu_arr).block_until_ready()
+
+    results = {}
+
+    # Solo
+    lat = []
+    for _ in range(100):
+        t0 = time.perf_counter()
+        fn(params, img).block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    results["solo"] = percentiles(lat)
+
+    for mode, enabled, budget in (("cosched", False, 1e18),
+                                  ("rtgang", True, 0.0)):
+        ex = GangExecutor(n_lanes=2, enabled=enabled,
+                          regulation_interval_s=0.01)
+        n_jobs = int(duration / period_s) - 2
+        ex.submit_rt(RTJob("dnn", dnn_quantum, lanes=(0,), prio=10,
+                           period_s=period_s, budget_bytes=budget,
+                           n_jobs=n_jobs))
+        ex.submit_be(BEJob("lbm_mem", mem_quantum, lanes=(0, 1),
+                           bytes_per_quantum=1536 * 1536 * 8.0))
+        ex.submit_be(BEJob("cutcp_cpu", cpu_quantum, lanes=(0, 1),
+                           bytes_per_quantum=4096 * 4.0))
+        stats = ex.run(duration)
+        # quantum *execution* time: trace segments labelled dnn
+        stats_lat = [s.t1 - s.t0 for s in ex.trace.segments
+                     if s.label == "dnn"]
+        results[mode] = percentiles(np.asarray(stats_lat) / 1e3)
+        results[mode]["be_quanta"] = stats["be_quanta"]
+    return results
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(k, v)

@@ -1,0 +1,28 @@
+"""Roofline benchmark: reads the dry-run JSON cache (results/dryrun/) and
+computes the three roofline terms per (arch x shape x mesh). This is the
+beyond-paper perf artifact; run ``python -m repro.launch.sweep`` first to
+populate the cache (hours on 1 CPU), else reports whatever cells exist."""
+import glob
+import json
+import os
+
+from repro.roofline.report import roofline_row
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if "flops_per_device" not in cell:   # skipped.json etc.
+            continue
+        rows.append(roofline_row(cell))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,46 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline bench.
+Prints ``name,value(s)`` lines; full objects go to stdout per-bench."""
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (fig1_parallelization, fig4_illustrative,
+                            fig5_synthetic, fig6_dnn_cdf, table3_overhead,
+                            roofline_bench)
+
+    print("== fig4 (illustrative example, paper §III-E) ==")
+    for r in fig4_illustrative.run():
+        print(r)
+
+    print("== fig5 (synthetic taskset traces, paper §V-B) ==")
+    for r in fig5_synthetic.run(horizon=120.0):
+        trace = r.pop("trace")
+        print(r)
+        print(trace.render_ascii(t_end=60.0, width=90))
+
+    print("== fig1 (DNN parallelization + co-run, paper §II) ==")
+    for r in fig1_parallelization.run():
+        print(r)
+
+    print("== fig6 (DNN latency CDFs: solo/cosched/rtgang, paper §V-C) ==")
+    for k, v in fig6_dnn_cdf.run(duration=5.0).items():
+        print(k, v)
+
+    print("== table3 (scheduler overhead, paper §V-D) ==")
+    for r in table3_overhead.run():
+        print(r)
+
+    print("== roofline (per arch x shape x mesh; dry-run cache) ==")
+    rows = roofline_bench.run()
+    for r in rows:
+        print(r)
+    if not rows:
+        print("(run `python -m repro.launch.sweep` to populate)")
+
+    print(f"== done in {time.time()-t0:.1f}s ==")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,50 @@
+"""The paper's headline scenario, end to end: a DAVE-2 DNN control loop as
+the real-time gang, co-located with memory/cpu best-effort jobs, with and
+without RT-Gang — on the real gang executor running real JAX compute.
+
+    PYTHONPATH=src python examples/deeppicar_gang.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.deeppicar import Dave2Config
+from repro.core.executor import BEJob, GangExecutor, RTJob
+from repro.models.dave2 import make_dave2
+
+
+def main():
+    cfg = Dave2Config()
+    params, fn = make_dave2(cfg)
+    img = jnp.ones((1, *cfg.input_hw, 3), jnp.float32)
+    fn(params, img).block_until_ready()
+
+    mem = jnp.ones((1536, 1536), jnp.float32)
+    mem_fn = jax.jit(lambda a: (a @ a).sum())
+    mem_fn(mem).block_until_ready()
+
+    period = 0.033                       # 30 Hz control loop (paper §II)
+    for enabled in (False, True):
+        ex = GangExecutor(n_lanes=2, enabled=enabled,
+                          regulation_interval_s=0.01)
+        ex.submit_rt(RTJob(
+            "dnn-control", lambda lane, i: fn(params, img).block_until_ready(),
+            lanes=(0,), prio=10, period_s=period, budget_bytes=0.0,
+            n_jobs=120))
+        ex.submit_be(BEJob(
+            "mem-hog", lambda lane: mem_fn(mem).block_until_ready(),
+            lanes=(0, 1), bytes_per_quantum=1536 * 1536 * 8.0))
+        stats = ex.run(5.0)
+        lat = np.array([s.t1 - s.t0 for s in ex.trace.segments
+                        if s.label == "dnn-control"])
+        mode = "RT-Gang" if enabled else "Co-Sched"
+        print(f"{mode:>8}: dnn p50={np.percentile(lat, 50):.2f}ms "
+              f"p99={np.percentile(lat, 99):.2f}ms max={lat.max():.2f}ms "
+              f"jobs={len(stats['response_times']['dnn-control'])} "
+              f"be_quanta={stats['be_quanta']['mem-hog']}")
+    print("RT-Gang keeps the control-loop latency near its solo value while"
+          " the best-effort job is throttled to the declared budget.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quick dev smoke: one tiny train/prefill/decode step per family on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+from repro.training.optimizer import OptConfig, Optimizer
+from repro.training.step import make_train_state, make_train_step
+
+ARCHS = sys.argv[1:] or ["qwen2-7b"]
+
+for arch in ARCHS:
+    cfg = reduced(get_config(arch))
+    mesh = make_local_mesh(1, 1)
+    parallel = ParallelConfig(param_dtype="float32", compute_dtype="float32",
+                              remat="block", q_block=8, kv_block=8)
+    api = build_model(cfg, parallel, mesh)
+    rng = jax.random.key(0)
+    params = api.init(rng)
+    B, S = 2, 32
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((B, cfg.n_vision_tokens, cfg.d_model),
+                                    jnp.float32) * 0.01
+    if cfg.family == "audio":
+        batch["frames"] = jnp.ones((B, cfg.n_encoder_frames, cfg.d_model),
+                                   jnp.float32) * 0.01
+    opt = Optimizer(OptConfig(name="adamw"))
+    state = make_train_state(api, opt, rng)
+    step = jax.jit(make_train_step(api, opt))
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch, loss)
+
+    # prefill + decode
+    pbatch = {k: v for k, v in batch.items() if k != "labels"}
+    logits, caches = jax.jit(api.prefill_fn)(state["params"], pbatch)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    tok = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits2, caches2 = jax.jit(api.decode_fn)(state["params"], caches, tok, pos)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+    print(f"{arch}: OK loss={loss:.4f} params={api.n_params()}")

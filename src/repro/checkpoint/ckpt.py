@@ -1,0 +1,137 @@
+"""Checkpointing: sharded-pytree save/restore with async writes, atomic
+publication, retention, deterministic data resume, and ELASTIC restore
+(a checkpoint saved on one mesh restores onto any other mesh/device count —
+leaves are stored as full logical arrays and re-sharded at load).
+
+Format: <dir>/step_<N>/manifest.json + leaf_<i>.npy files;
+<dir>/step_<N>.done marks a complete checkpoint (atomic publication).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+
+    # ------------------------------------------------------------------
+    def _save_sync(self, state, step: int, extra: Dict[str, Any]):
+        leaves, paths, _ = _flatten_with_paths(state)
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": []}
+        for i, (leaf, path) in enumerate(zip(leaves, paths)):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(final + ".done", "w") as f:
+            f.write(str(time.time()))
+        self.save_count += 1
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s}.done"))
+            except OSError:
+                pass
+
+    def save(self, state, step: int, extra: Optional[Dict[str, Any]] = None,
+             blocking: bool = False):
+        """Async by default: snapshot to host, then write in a thread."""
+        extra = extra or {}
+        # snapshot to host synchronously (cheap vs training step), write async
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        self.wait()
+        if blocking:
+            self._save_sync(host_state, step, extra)
+        else:
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(host_state, step, extra),
+                daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.endswith(".done") and name.startswith("step_"):
+                steps.append(int(name[len("step_"):-len(".done")]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, Dict[str, Any]]:
+        """Restore onto the current mesh. ``like``: pytree of arrays or
+        ShapeDtypeStructs defining the structure; ``shardings``: optional
+        matching pytree of NamedShardings (elastic re-shard happens here —
+        the stored full arrays are device_put with the new shardings)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        final = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves_like, paths, treedef = _flatten_with_paths(like)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        out_leaves = []
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] * len(paths))
+        for leaf, path, sh in zip(leaves_like, paths, shard_leaves):
+            entry = by_path[path]
+            arr = np.load(os.path.join(final, entry["file"]))
+            expected = tuple(leaf.shape)
+            if tuple(arr.shape) != expected:
+                raise ValueError(f"shape mismatch at {path}: "
+                                 f"{arr.shape} vs {expected}")
+            if sh is not None:
+                out_leaves.append(jax.device_put(arr, sh))
+            else:
+                out_leaves.append(jnp.asarray(arr))
+        return jax.tree.unflatten(treedef, out_leaves), manifest["extra"]

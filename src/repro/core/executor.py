@@ -1,0 +1,253 @@
+"""Gang-scheduled executor for real JAX workloads.
+
+The TPU-fleet adaptation of RT-Gang (DESIGN.md §2): "cores" become *lanes*
+(device slices / host workers), threads become per-lane quanta of a job step
+(one inference, one training microstep), and the gang lock serializes RT jobs
+fleet-wide while best-effort quanta fill idle lanes under byte-budget
+admission control.
+
+Differences from the kernel implementation, modeled explicitly:
+* no mid-quantum preemption — gang preemption takes effect at quantum
+  boundaries, contributing the blocking term B_i = max lower-prio quantum to
+  RTA (core/rta.py);
+* throttling is admission-based (quantum bytes known from
+  ``compiled.cost_analysis()``) rather than perf-counter-reactive;
+* straggler mitigation: per-quantum deadline monitor with optional
+  speculative backup dispatch of idempotent quanta onto idle lanes.
+
+Works with any callables; benchmarks bind jitted JAX functions per lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.gang import RTTask, Thread
+from repro.core.glock import GangScheduler
+from repro.core.throttle import BandwidthRegulator
+from repro.core.tracing import Trace
+
+_uid = itertools.count(1)
+
+
+@dataclasses.dataclass
+class RTJob:
+    """A periodic real-time job: each release runs ``fn(lane, job_idx)`` on
+    every lane in ``lanes`` simultaneously (the gang)."""
+    name: str
+    fn: Callable[[int, int], None]
+    lanes: Tuple[int, ...]
+    prio: int
+    period_s: Optional[float] = None       # None => single job
+    budget_bytes: float = 0.0              # BE budget while this gang runs
+    n_jobs: Optional[int] = None
+    uid: int = dataclasses.field(default_factory=lambda: next(_uid))
+
+
+@dataclasses.dataclass
+class BEJob:
+    name: str
+    fn: Callable[[int], None]              # fn(lane)
+    lanes: Tuple[int, ...]
+    bytes_per_quantum: float = 0.0
+    uid: int = dataclasses.field(default_factory=lambda: next(_uid))
+
+
+@dataclasses.dataclass
+class _JobInstance:
+    job: RTJob
+    index: int
+    release: float
+    remaining_lanes: set
+    start: Optional[float] = None
+    finish: Optional[float] = None
+
+
+class GangExecutor:
+    def __init__(self, n_lanes: int, *, enabled: bool = True,
+                 regulation_interval_s: float = 0.010,
+                 straggler_factor: float = 3.0,
+                 backup_dispatch: bool = False):
+        self.n_lanes = n_lanes
+        self.enabled = enabled
+        self.sched = GangScheduler(n_lanes, enabled=enabled)
+        self.reg = BandwidthRegulator(n_lanes,
+                                      interval=regulation_interval_s,
+                                      mode="admission")
+        self.trace = Trace(n_lanes)
+        self.rt_jobs: List[RTJob] = []
+        self.be_jobs: List[BEJob] = []
+        self._instances: Dict[int, List[_JobInstance]] = {}
+        self._tasks: Dict[int, RTTask] = {}
+        self._threads: Dict[Tuple[int, int], Thread] = {}
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._stop = False
+        self.straggler_factor = straggler_factor
+        self.backup_dispatch = backup_dispatch
+        self.stragglers: List[Tuple[str, int, float]] = []
+        self.response_times: Dict[str, List[float]] = {}
+        self.be_quanta: Dict[str, int] = {}
+        self._ema: Dict[str, float] = {}
+        self._t0 = 0.0
+        # lanes currently *executing* an RT quantum -> gang prio. A newly
+        # scheduled gang waits for other gangs' in-flight quanta to drain
+        # (the executor analogue of the preemption IPI + context switch;
+        # bounded by one quantum = the B_i blocking term in core/rta.py).
+        self._inflight: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def submit_rt(self, job: RTJob):
+        self.rt_jobs.append(job)
+        self._instances[job.uid] = []
+        self.response_times.setdefault(job.name, [])
+        # mirror as an RTTask (same uid!) so the glock state machine sees
+        # gang identity and picked.task.uid maps back to the job
+        self._tasks[job.uid] = RTTask(
+            name=job.name, wcet=0.0, period=(job.period_s or 1e9) * 1e3,
+            cores=job.lanes, prio=job.prio, mem_budget=job.budget_bytes,
+            uid=job.uid)
+        for i, lane in enumerate(job.lanes):
+            self._threads[(job.uid, lane)] = Thread(
+                task=self._tasks[job.uid], core=lane, index=i)
+
+    def submit_be(self, job: BEJob):
+        self.be_jobs.append(job)
+        self.be_quanta.setdefault(job.name, 0)
+
+    # ------------------------------------------------------------------
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _release_jobs(self):
+        now = self._now()
+        for job in self.rt_jobs:
+            insts = self._instances[job.uid]
+            n = len(insts)
+            if job.n_jobs is not None and n >= job.n_jobs:
+                continue
+            period = job.period_s
+            next_rel = 0.0 if n == 0 else (insts[-1].release + (period or 0))
+            if period is None and n > 0:
+                continue
+            if now + 1e-9 >= next_rel:
+                insts.append(_JobInstance(
+                    job=job, index=n, release=next_rel,
+                    remaining_lanes=set(job.lanes)))
+
+    def _ready_thread(self, lane: int) -> Optional[Thread]:
+        best = None
+        best_prio = -1
+        for job in self.rt_jobs:
+            if lane not in job.lanes:
+                continue
+            inst = next((i for i in self._instances[job.uid]
+                         if lane in i.remaining_lanes), None)
+            if inst is None:
+                continue
+            if job.prio > best_prio:
+                best_prio = job.prio
+                best = self._threads[(job.uid, lane)]
+        return best
+
+    def _active_instance(self, job: RTJob, lane: int) -> Optional[_JobInstance]:
+        return next((i for i in self._instances[job.uid]
+                     if lane in i.remaining_lanes), None)
+
+    # ------------------------------------------------------------------
+    def _worker(self, lane: int):
+        prev: Optional[Thread] = None
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+                self._release_jobs()
+                nxt = self._ready_thread(lane)
+            picked = self.sched.pick_next_task_rt(lane, prev, nxt)
+            prev = None
+            if picked is not None:
+                job = next(j for j in self.rt_jobs
+                           if j.uid == picked.task.uid)
+                self.reg.set_gang_budget(job.budget_bytes)
+                inst = None
+                with self._lock:
+                    inst = self._active_instance(job, lane)
+                if inst is None:
+                    prev = picked
+                    continue
+                # gang-isolation barrier: wait out other gangs' quanta
+                while True:
+                    with self._lock:
+                        others = [p for ln, p in self._inflight.items()
+                                  if ln != lane and p != job.prio]
+                        if not others:
+                            self._inflight[lane] = job.prio
+                            break
+                    time.sleep(0.0002)
+                t0 = self._now()
+                if inst.start is None:
+                    inst.start = t0
+                try:
+                    job.fn(lane, inst.index)
+                finally:
+                    with self._lock:
+                        self._inflight.pop(lane, None)
+                t1 = self._now()
+                self.trace.record(lane, job.name, t0 * 1e3, t1 * 1e3)
+                dur = t1 - t0
+                key = job.name
+                ema = self._ema.get(key)
+                if ema is not None and dur > self.straggler_factor * ema:
+                    self.stragglers.append((key, lane, dur))
+                self._ema[key] = dur if ema is None else \
+                    0.9 * ema + 0.1 * dur
+                with self._lock:
+                    inst.remaining_lanes.discard(lane)
+                    if not inst.remaining_lanes and inst.finish is None:
+                        inst.finish = t1
+                        self.response_times[job.name].append(
+                            inst.finish - inst.release)
+                prev = picked
+                continue
+
+            # best-effort filling under admission throttling
+            ran_be = False
+            for be in self.be_jobs:
+                if lane not in be.lanes:
+                    continue
+                now = self._now()
+                if self.reg.charge(lane, be.bytes_per_quantum, now):
+                    t0 = self._now()
+                    be.fn(lane)
+                    t1 = self._now()
+                    self.trace.record(lane, be.name, t0 * 1e3, t1 * 1e3)
+                    self.be_quanta[be.name] += 1
+                    ran_be = True
+                    break
+            if not ran_be:
+                time.sleep(0.0005)
+
+    # ------------------------------------------------------------------
+    def run(self, duration_s: float):
+        self._t0 = time.monotonic()
+        workers = [threading.Thread(target=self._worker, args=(lane,),
+                                    daemon=True)
+                   for lane in range(self.n_lanes)]
+        for w in workers:
+            w.start()
+        time.sleep(duration_s)
+        with self._lock:
+            self._stop = True
+        for w in workers:
+            w.join(timeout=5.0)
+        self.trace.finish_view()
+        return {
+            "response_times": self.response_times,
+            "be_quanta": dict(self.be_quanta),
+            "stragglers": list(self.stragglers),
+            "preemptions": self.sched.g.preemptions,
+            "acquisitions": self.sched.g.acquisitions,
+        }

@@ -1,0 +1,100 @@
+"""Task model for RT-Gang: real-time gangs, virtual gangs, best-effort tasks.
+
+Mirrors the paper's model (§III): a real-time gang is a set of threads
+(possibly from multiple tasks — a *virtual gang*) sharing one distinct
+real-time priority; priorities define gang identity (paper §IV-E: assigning
+the same RT priority to several tasks *is* the virtual-gang mechanism).
+Best-effort tasks have no RT priority and run under the fair scheduler on
+idle cores, throttled to the running gang's declared memory-bandwidth budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Thread:
+    """One schedulable thread, pinned to a core (no migration, paper §III-A)."""
+    task: "RTTask"
+    core: int
+    index: int = 0
+
+    @property
+    def name(self) -> str:
+        return f"{self.task.name}/t{self.index}"
+
+
+@dataclasses.dataclass
+class RTTask:
+    """Periodic parallel real-time task (gang model: (C, P, k cores)).
+
+    wcet:    per-job execution time of each thread in isolation (paper uses
+             equal per-thread compute; a per-thread list is also accepted).
+    period:  release period; deadline = period (implicit deadlines).
+    cores:   cores its threads are pinned to.
+    prio:    distinct fixed RT priority — HIGHER value = higher priority.
+             Tasks sharing a prio form a *virtual gang*.
+    mem_budget: tolerable best-effort memory traffic (bytes or abstract
+             units per regulation interval) while this gang runs; 0 = total
+             isolation (paper §III-B).
+    """
+    name: str
+    wcet: float
+    period: float
+    cores: Tuple[int, ...]
+    prio: int
+    mem_budget: float = 0.0
+    release_offset: float = 0.0
+    n_jobs: Optional[int] = None          # None = unbounded
+    wcet_per_core: Optional[Dict[int, float]] = None
+    uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    def thread_wcet(self, core: int) -> float:
+        if self.wcet_per_core:
+            return self.wcet_per_core.get(core, self.wcet)
+        return self.wcet
+
+    @property
+    def n_threads(self) -> int:
+        return len(self.cores)
+
+    @property
+    def utilization(self) -> float:
+        return self.wcet / self.period
+
+
+@dataclasses.dataclass
+class BETask:
+    """Best-effort task (CFS class). mem_rate: abstract memory traffic it
+    generates per ms of execution (used by the throttling model)."""
+    name: str
+    cores: Tuple[int, ...]
+    mem_rate: float = 0.0
+    uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+
+def make_virtual_gang(name: str, members: Sequence[RTTask], prio: int,
+                      mem_budget: float = 0.0) -> List[RTTask]:
+    """Link tasks into a virtual gang by assigning them one shared priority
+    (exactly the paper's mechanism, §IV-E). Returns the updated members."""
+    out = []
+    for t in members:
+        out.append(dataclasses.replace(t, prio=prio, mem_budget=mem_budget,
+                                       name=t.name))
+    return out
+
+
+def validate_taskset(tasks: Sequence[RTTask]) -> None:
+    """Distinct priority per gang; no core pinned twice within one gang."""
+    by_prio: Dict[int, List[RTTask]] = {}
+    for t in tasks:
+        by_prio.setdefault(t.prio, []).append(t)
+    for prio, members in by_prio.items():
+        cores = [c for t in members for c in t.cores]
+        if len(cores) != len(set(cores)):
+            raise ValueError(
+                f"virtual gang at prio {prio} pins a core twice: {cores}")

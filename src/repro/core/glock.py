@@ -1,0 +1,148 @@
+"""The gang-scheduling lock — a faithful transcription of the paper's
+Algorithms 1-4 (struct glock; acquire / try_release / gang-preemption /
+pick_next_task_rt).
+
+This is deliberately a plain-Python state machine over integer core ids so it
+can be (a) unit-tested against every transition in the paper's pseudo-code,
+(b) driven by the discrete-event simulator (core = CPU core), and (c) driven
+by the fleet executor (core = mesh slice / lane). The spinlock of the paper
+becomes a threading.Lock when driven concurrently; the simulator drives it
+single-threaded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.gang import RTTask, Thread
+
+
+@dataclasses.dataclass
+class GLock:
+    """struct glock (Algorithm 1, line 1-2)."""
+    n_cores: int
+    held_flag: bool = False
+    locked_cores: int = 0                 # bitmask
+    blocked_cores: int = 0                # bitmask
+    leader: Optional[RTTask] = None
+    gthreads: List[Optional[Thread]] = dataclasses.field(default=None)
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    # instrumentation
+    acquisitions: int = 0
+    preemptions: int = 0
+    ipis_sent: int = 0
+
+    def __post_init__(self):
+        if self.gthreads is None:
+            self.gthreads = [None] * self.n_cores
+
+    # ---- bitmask helpers ---------------------------------------------------
+    def _set(self, mask: int, cpu: int) -> int:
+        return mask | (1 << cpu)
+
+    def _clear(self, mask: int, cpu: int) -> int:
+        return mask & ~(1 << cpu)
+
+    def _is_zero(self, mask: int) -> bool:
+        return mask == 0
+
+    def cores_in(self, mask: int) -> List[int]:
+        return [c for c in range(self.n_cores) if mask & (1 << c)]
+
+
+class GangScheduler:
+    """pick_next_task_rt with the one-gang-at-a-time invariant.
+
+    ``reschedule_cpus`` is a callback(core_list) standing in for the
+    rescheduling IPIs; the simulator re-runs scheduling on those cores, the
+    executor wakes the slice workers.
+    """
+
+    def __init__(self, n_cores: int,
+                 reschedule_cpus: Optional[Callable[[List[int]], None]] = None,
+                 enabled: bool = True):
+        self.g = GLock(n_cores=n_cores)
+        self.reschedule_cpus = reschedule_cpus or (lambda cores: None)
+        self.enabled = enabled   # paper: runtime toggle via sched_features
+
+    # ---- Algorithm 2: acquire -----------------------------------------------
+    def acquire_gang_lock(self, cpu: int, thread: Thread) -> None:
+        g = self.g
+        g.held_flag = True
+        g.locked_cores = g._set(g.locked_cores, cpu)
+        g.leader = thread.task
+        g.gthreads[cpu] = thread
+        g.acquisitions += 1
+
+    # ---- Algorithm 3: try release -------------------------------------------
+    def try_glock_release(self, prev: Optional[Thread]) -> None:
+        g = self.g
+        if prev is None:
+            return
+        for cpu in g.cores_in(g.locked_cores):
+            if g.gthreads[cpu] is prev:
+                g.locked_cores = g._clear(g.locked_cores, cpu)
+                g.gthreads[cpu] = None
+        if g._is_zero(g.locked_cores):
+            g.held_flag = False
+            g.leader = None
+            blocked = g.cores_in(g.blocked_cores)
+            if blocked:
+                g.ipis_sent += len(blocked)
+                self.reschedule_cpus(blocked)
+            g.blocked_cores = 0
+
+    # ---- Algorithm 4: gang preemption ----------------------------------------
+    def do_gang_preemption(self) -> List[int]:
+        g = self.g
+        victims = g.cores_in(g.locked_cores)
+        if victims:
+            g.ipis_sent += len(victims)
+            g.preemptions += 1
+            self.reschedule_cpus(victims)
+        g.locked_cores = 0
+        for cpu in victims:
+            g.gthreads[cpu] = None
+        return victims
+
+    # ---- Algorithm 1: pick_next_task_rt ---------------------------------------
+    def pick_next_task_rt(self, cpu: int, prev: Optional[Thread],
+                          next_thread: Optional[Thread]) -> Optional[Thread]:
+        """Returns the thread to run on ``cpu`` (None -> fall through to CFS).
+
+        ``prev``: thread going off this core (may be None).
+        ``next_thread``: highest-priority ready RT thread on this core's
+        runqueue (may be None).
+        """
+        if not self.enabled:
+            return next_thread
+        g = self.g
+        with g.lock:
+            if g.held_flag:
+                self.try_glock_release(prev)                     # Line 11
+            if next_thread is None:
+                return None
+            task = next_thread.task
+            if not g.held_flag:                                  # Line 12-13
+                self.acquire_gang_lock(cpu, next_thread)
+                return next_thread
+            if task.prio == g.leader.prio:                       # Line 14-15
+                g.locked_cores = g._set(g.locked_cores, cpu)
+                g.gthreads[cpu] = next_thread
+                return next_thread
+            if task.prio > g.leader.prio:                        # Line 16-17
+                self.do_gang_preemption()
+                self.acquire_gang_lock(cpu, next_thread)
+                return next_thread
+            # Line 18-19: lower priority -> blocked
+            g.blocked_cores = g._set(g.blocked_cores, cpu)
+            return None
+
+    # ---- invariant (for property tests) ----------------------------------------
+    def running_gang_prios(self) -> Set[int]:
+        return {t.task.prio for t in self.g.gthreads if t is not None}
+
+    def check_invariant(self) -> bool:
+        """At most one distinct gang priority holds cores at any time."""
+        return len(self.running_gang_prios()) <= 1

@@ -1,0 +1,247 @@
+"""Discrete-event (fixed-quantum) scheduler simulator.
+
+Drives the faithful ``GangScheduler`` state machine over N cores with:
+* periodic parallel RT tasks (threads pinned to cores, no migration),
+* best-effort tasks under a CFS-like fair scheduler on idle cores,
+* a pluggable pairwise interference model (co-scheduled task X slows task Y
+  by factor f(Y, X) — the paper's DNN/BwWrite case gives f = 10.33),
+* BWLOCK-style bandwidth throttling of best-effort cores.
+
+``enabled=False`` turns RT-Gang off: each core independently runs its
+highest-priority ready RT thread (Linux SCHED_FIFO baseline = the paper's
+"Co-Sched" configuration). This reproduces Fig.4(a)/(c); enabling RT-Gang
+reproduces Fig.4(b) and Fig.5(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.gang import BETask, RTTask, Thread, validate_taskset
+from repro.core.glock import GangScheduler
+from repro.core.throttle import BandwidthRegulator
+from repro.core.tracing import Trace
+
+
+@dataclasses.dataclass
+class Job:
+    task: RTTask
+    release: float
+    remaining: Dict[int, float]          # core -> remaining work
+    index: int
+    start: Optional[float] = None
+    finish: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return all(r <= 1e-12 for r in self.remaining.values())
+
+    def response_time(self) -> Optional[float]:
+        if self.finish is None:
+            return None
+        return self.finish - self.release
+
+
+PairwiseInterference = Callable[[str, str], float]
+
+
+def no_interference(victim: str, aggressor: str) -> float:
+    return 1.0
+
+
+def matrix_interference(table: Dict[Tuple[str, str], float]
+                        ) -> PairwiseInterference:
+    def f(victim: str, aggressor: str) -> float:
+        return table.get((victim, aggressor), 1.0)
+    return f
+
+
+@dataclasses.dataclass
+class SimResult:
+    trace: Trace
+    response_times: Dict[str, List[float]]
+    deadline_misses: Dict[str, int]
+    be_progress: Dict[str, float]
+    throttle_events: int
+    ipis: int
+    preemptions: int
+    slack_time: float                    # core-ms of idle+BE time
+    horizon: float
+
+    def wcrt(self, name: str) -> float:
+        rs = self.response_times.get(name) or [float("nan")]
+        return max(rs)
+
+
+class Simulator:
+    def __init__(self, n_cores: int, rt_tasks: Sequence[RTTask],
+                 be_tasks: Sequence[BETask] = (),
+                 interference: PairwiseInterference = no_interference,
+                 rt_gang_enabled: bool = True,
+                 throttle_mode: str = "reactive",
+                 regulation_interval: float = 1.0,
+                 dt: float = 0.05):
+        validate_taskset(rt_tasks)
+        self.n_cores = n_cores
+        self.rt_tasks = list(rt_tasks)
+        self.be_tasks = list(be_tasks)
+        self.interference = interference
+        self.dt = dt
+        self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled)
+        self.reg = BandwidthRegulator(n_cores, interval=regulation_interval,
+                                      mode=throttle_mode)
+        self.trace = Trace(n_cores)
+
+    # -----------------------------------------------------------------
+    def run(self, horizon: float) -> SimResult:
+        dt = self.dt
+        nsteps = int(round(horizon / dt))
+        jobs: Dict[int, List[Job]] = {t.uid: [] for t in self.rt_tasks}
+        threads: Dict[Tuple[int, int], Thread] = {}
+        for t in self.rt_tasks:
+            for i, c in enumerate(t.cores):
+                threads[(t.uid, c)] = Thread(task=t, core=c, index=i)
+
+        current: List[Optional[Thread]] = [None] * self.n_cores
+        cur_job: Dict[int, Job] = {}                 # task uid -> active job
+        be_progress = {b.name: 0.0 for b in self.be_tasks}
+        be_rr = 0
+        response: Dict[str, List[float]] = {t.name: [] for t in self.rt_tasks}
+        misses = {t.name: 0 for t in self.rt_tasks}
+        slack = 0.0
+
+        def release_jobs(now: float):
+            for t in self.rt_tasks:
+                done_jobs = len(jobs[t.uid])
+                if t.n_jobs is not None and done_jobs >= t.n_jobs:
+                    continue
+                next_rel = t.release_offset + done_jobs * t.period
+                if now + 1e-9 >= next_rel:
+                    jobs[t.uid].append(Job(
+                        task=t, release=next_rel, index=done_jobs,
+                        remaining={c: t.thread_wcet(c) for c in t.cores}))
+
+        def active_job(t: RTTask) -> Optional[Job]:
+            for j in jobs[t.uid]:
+                if not j.done:
+                    return j
+            return None
+
+        def ready_thread(core: int) -> Optional[Thread]:
+            best: Optional[Thread] = None
+            for t in self.rt_tasks:
+                if core not in t.cores:
+                    continue
+                j = active_job(t)
+                if j is None or j.remaining.get(core, 0) <= 1e-12:
+                    continue
+                if best is None or t.prio > best.task.prio:
+                    best = threads[(t.uid, core)]
+            return best
+
+        dirty = set(range(self.n_cores))
+        self.sched.reschedule_cpus = lambda cores: dirty.update(cores)
+
+        for step in range(nsteps):
+            now = step * dt
+            release_jobs(now)
+
+            # ---- scheduling passes until fixed point --------------------
+            dirty.update(range(self.n_cores))
+            for _ in range(4 + len(self.rt_tasks)):
+                if not dirty:
+                    break
+                todo = sorted(dirty)
+                dirty.clear()
+                for c in todo:
+                    prev = current[c]
+                    nxt = ready_thread(c)
+                    picked = self.sched.pick_next_task_rt(c, prev, nxt)
+                    current[c] = picked
+            # preempted cores cleared by do_gang_preemption: sync with glock
+            for c in range(self.n_cores):
+                if current[c] is not None and \
+                        self.sched.enabled and \
+                        self.sched.g.gthreads[c] is not current[c]:
+                    current[c] = self.sched.g.gthreads[c]
+
+            # set throttle budget from the running gang
+            if self.sched.enabled:
+                if self.sched.g.held_flag and self.sched.g.leader is not None:
+                    self.reg.set_gang_budget(self.sched.g.leader.mem_budget)
+                else:
+                    self.reg.set_gang_budget(None)
+            else:
+                self.reg.set_gang_budget(None)
+
+            # ---- best-effort filling ------------------------------------
+            be_running: Dict[int, BETask] = {}
+            free_cores = [c for c in range(self.n_cores) if current[c] is None]
+            if self.be_tasks and free_cores:
+                for c in free_cores:
+                    cands = [b for b in self.be_tasks if c in b.cores]
+                    if not cands:
+                        continue
+                    b = cands[(be_rr + c) % len(cands)]
+                    if self.reg.is_stalled(c, now):
+                        self.trace.record(c, "throttled:" + b.name, now,
+                                          now + dt)
+                        continue
+                    be_running[c] = b
+                be_rr += 1
+
+            # ---- who is actually running (for interference) -------------
+            running_names = {}
+            for c in range(self.n_cores):
+                if current[c] is not None:
+                    running_names[c] = current[c].task.name
+                elif c in be_running:
+                    running_names[c] = be_running[c].name
+
+            # ---- advance RT work -----------------------------------------
+            for c in range(self.n_cores):
+                th = current[c]
+                if th is None:
+                    if c in be_running:
+                        b = be_running[c]
+                        ok = self.reg.charge(c, b.mem_rate * dt, now)
+                        if ok:
+                            be_progress[b.name] += dt
+                            self.trace.record(c, b.name, now, now + dt)
+                        else:
+                            self.trace.record(c, "throttled:" + b.name, now,
+                                              now + dt)
+                        slack += dt
+                    else:
+                        slack += dt
+                        self.trace.record(c, None, now, now + dt)
+                    continue
+                j = active_job(th.task)
+                if j is None:
+                    continue
+                if j.start is None:
+                    j.start = now
+                co = {n for cc, n in running_names.items()
+                      if cc != c and n != th.task.name}
+                slow = 1.0
+                for other in co:
+                    slow = max(slow, self.interference(th.task.name, other))
+                rate = 1.0 / slow
+                j.remaining[c] = max(0.0, j.remaining[c] - dt * rate)
+                self.trace.record(c, th.task.name, now, now + dt)
+                if j.done and j.finish is None:
+                    j.finish = now + dt
+                    response[th.task.name].append(j.response_time())
+                    if j.response_time() > th.task.period + 1e-9:
+                        misses[th.task.name] += 1
+
+        throttle_events = sum(st.throttle_events
+                              for st in self.reg.cores.values())
+        return SimResult(
+            trace=self.trace, response_times=response,
+            deadline_misses=misses, be_progress=be_progress,
+            throttle_events=throttle_events,
+            ipis=self.sched.g.ipis_sent,
+            preemptions=self.sched.g.preemptions,
+            slack_time=slack, horizon=horizon)

@@ -1,0 +1,106 @@
+"""Memory-bandwidth throttling of best-effort work (paper §III-D / §IV-F,
+adapting BWLOCK [53]).
+
+Paper mechanism: per-core perf counters count memory transactions per 1 ms
+regulation interval; on budget overflow an interrupt stalls the core until
+the next interval. The budget is the *currently running RT gang's* declared
+tolerable traffic.
+
+Two modes (DESIGN.md §7.3):
+
+* ``reactive``  — paper-faithful: usage accumulates as best-effort work runs;
+  the core is stalled the moment the budget is exceeded (overshoot of at most
+  one accounting quantum, like one sampling period of the counter).
+* ``admission`` — TPU-native: a quantum of work with statically-known bytes
+  (from ``compiled.cost_analysis()``) is admitted only if it fits the
+  remaining budget. No overshoot; suits hardware without mid-program
+  preemption.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass
+class ThrottleState:
+    budget: float                # allowed traffic per interval (bytes/units)
+    interval: float = 1.0        # regulation interval (ms in the sim)
+    used: float = 0.0
+    window_start: float = 0.0
+    stalled_until: float = 0.0
+    # instrumentation
+    throttle_events: int = 0
+    total_used: float = 0.0
+    total_denied: float = 0.0
+
+
+class BandwidthRegulator:
+    """Per-core regulator bank; budget is set by the running gang."""
+
+    def __init__(self, n_cores: int, interval: float = 1.0,
+                 mode: str = "reactive"):
+        assert mode in ("reactive", "admission")
+        self.mode = mode
+        self.interval = interval
+        self.cores: Dict[int, ThrottleState] = {
+            c: ThrottleState(budget=float("inf"), interval=interval)
+            for c in range(n_cores)}
+        self._lock = threading.Lock()
+
+    def set_gang_budget(self, budget: Optional[float]) -> None:
+        """Called on gang-lock acquisition: the new gang's declared budget is
+        enforced on every core that runs best-effort work (paper §IV-F).
+        A budget increase (e.g. the throttling gang departed) lifts stalls
+        from the previous regime; usage within the window is kept."""
+        b = float("inf") if budget is None else float(budget)
+        with self._lock:
+            for st in self.cores.values():
+                if b > st.budget:
+                    st.stalled_until = 0.0
+                st.budget = b
+
+    def _roll_window(self, st: ThrottleState, now: float) -> None:
+        while now >= st.window_start + st.interval:
+            st.window_start += st.interval
+            st.used = 0.0
+
+    def charge(self, core: int, amount: float, now: float) -> bool:
+        """Account ``amount`` of traffic at time ``now``.
+
+        reactive: always charges; returns False (and stalls the core until
+        the next interval) if the budget is now exceeded.
+        admission: charges only if it fits; returns False if denied.
+        """
+        st = self.cores[core]
+        self._roll_window(st, now)
+        if now < st.stalled_until:
+            st.total_denied += amount
+            return False
+        if self.mode == "admission":
+            if st.used + amount > st.budget:
+                st.throttle_events += 1
+                st.total_denied += amount
+                st.stalled_until = st.window_start + st.interval
+                return False
+            st.used += amount
+            st.total_used += amount
+            return True
+        # reactive
+        st.used += amount
+        st.total_used += amount
+        if st.used > st.budget:
+            st.throttle_events += 1
+            st.stalled_until = st.window_start + st.interval
+            return False
+        return True
+
+    def is_stalled(self, core: int, now: float) -> bool:
+        st = self.cores[core]
+        self._roll_window(st, now)
+        return now < st.stalled_until
+
+    def next_release(self, core: int, now: float) -> float:
+        st = self.cores[core]
+        return max(st.stalled_until, now)

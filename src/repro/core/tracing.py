@@ -1,0 +1,86 @@
+"""Execution traces (KernelShark-lite): per-core timeline segments with an
+ASCII renderer and CSV export, used by the simulator, the executor and the
+Fig.5 benchmark."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Segment:
+    core: int
+    label: Optional[str]          # None = idle; "throttled:<task>" = stalled
+    t0: float
+    t1: float
+
+
+class Trace:
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        self.segments: List[Segment] = []
+        self._open: Dict[int, Segment] = {}
+
+    def record(self, core: int, label: Optional[str], t0: float, t1: float):
+        seg = self._open.get(core)
+        if seg is not None and seg.label == label and \
+                abs(seg.t1 - t0) < 1e-9:
+            seg.t1 = t1
+            return
+        if seg is not None:
+            self.segments.append(seg)
+        self._open[core] = Segment(core, label, t0, t1)
+
+    def finish(self):
+        for seg in self._open.values():
+            self.segments.append(seg)
+        self._open.clear()
+        self.segments.sort(key=lambda s: (s.core, s.t0))
+
+    def busy(self, label: str) -> float:
+        self.finish_view()
+        return sum(s.t1 - s.t0 for s in self.segments if s.label == label)
+
+    def finish_view(self):
+        if self._open:
+            self.finish()
+
+    def to_csv(self) -> str:
+        self.finish_view()
+        lines = ["core,label,t0,t1"]
+        for s in self.segments:
+            lines.append(f"{s.core},{s.label or 'idle'},{s.t0:.4f},{s.t1:.4f}")
+        return "\n".join(lines)
+
+    def render_ascii(self, t_end: Optional[float] = None, width: int = 100,
+                     t_start: float = 0.0) -> str:
+        """One row per core; distinct letters per task label."""
+        self.finish_view()
+        if not self.segments:
+            return "(empty trace)"
+        if t_end is None:
+            t_end = max(s.t1 for s in self.segments)
+        labels = sorted({s.label for s in self.segments if s.label})
+        letters = {}
+        alphabet = "ABCDEFGHJKLMNPQRSTUVWXYZabcdefghjklmnpqrstuvwxyz"
+        for i, lab in enumerate(labels):
+            if lab.startswith("throttled:"):
+                letters[lab] = "~"
+            else:
+                letters[lab] = alphabet[i % len(alphabet)]
+        span = t_end - t_start
+        rows = []
+        for c in range(self.n_cores):
+            row = ["."] * width
+            for s in self.segments:
+                if s.core != c or s.label is None:
+                    continue
+                i0 = int((max(s.t0, t_start) - t_start) / span * width)
+                i1 = int((min(s.t1, t_end) - t_start) / span * width)
+                for i in range(max(i0, 0), min(max(i1, i0 + 1), width)):
+                    row[i] = letters[s.label]
+            rows.append(f"core{c} |" + "".join(row) + "|")
+        legend = "  ".join(f"{v}={k}" for k, v in letters.items()
+                           if not k.startswith("throttled:"))
+        return "\n".join(rows) + f"\n  [{t_start:.1f}..{t_end:.1f}ms] " + \
+            legend + "  ~=throttled"

@@ -1,0 +1,38 @@
+"""jit'd public wrapper for the flash-attention Pallas kernel.
+
+Accepts the model-layer layout (B, S, H, D); transposes to the kernel's
+(B*H, S, D) layout; handles GQA via the kernel's index-map grouping.
+``interpret`` defaults to True off-TPU (CPU validation) and False on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, group=G,
+                               interpret=interpret)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

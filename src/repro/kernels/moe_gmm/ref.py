@@ -1,0 +1,14 @@
+"""Oracle for the grouped matmul: masked batched einsum."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_reference(x, w, counts):
+    """x: (E, C, D); w: (E, D, F); counts: (E,) -> (E, C, F) with rows >=
+    counts[e] zeroed."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    rows = jnp.arange(x.shape[1])[None, :, None]
+    valid = rows < counts[:, None, None]
+    return jnp.where(valid, out, 0.0).astype(x.dtype)

@@ -1,0 +1,23 @@
+"""Oracle for the RG-LRU recurrence kernel: plain lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_reference(log_a, b):
+    """log_a, b: (B, S, C) -> h_all (B, S, C); h_0 = 0."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bb = b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    def per_b(ab, bbb):
+        h0 = jnp.zeros((ab.shape[-1],), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (ab, bbb))
+        return ys
+
+    return jax.vmap(per_b)(a, bb).astype(log_a.dtype)

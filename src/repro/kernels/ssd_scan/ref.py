@@ -1,0 +1,31 @@
+"""Sequential-scan oracle for the SSD kernel (and for mamba2's chunked jnp
+path): the literal recurrence, one token at a time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, Bm, Cm, A):
+    """x: (BH, S, P); dt: (BH, S, 1); Bm, Cm: (BH, S, N); A: (BH, 1).
+    Returns (y: (BH, S, P), h_final: (BH, P, N))."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def per_bh(xb, dtb, bb, cb, ab):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt[0] * ab[0])
+            h = da * h + dtt[0] * jnp.outer(xt, bt)
+            y = h @ ct
+            return h, y
+
+        h0 = jnp.zeros((P, N), jnp.float32)
+        h, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return ys, h
+
+    y, h = jax.vmap(per_bh)(x, dt, Bm, Cm, A)
+    return y.astype(x.dtype), h

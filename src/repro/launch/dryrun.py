@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). Do not move them.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, get_shape, valid_cells  # noqa: E402
+from repro.launch import inputs as I  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.recipes import parallel_for  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.roofline.hlo_analysis import analyze as analyze_hlo  # noqa: E402
+from repro.training.optimizer import OptConfig, Optimizer  # noqa: E402
+from repro.training.step import make_train_step, make_train_state, \
+    state_pspecs  # noqa: E402
+
+
+def sds_tree(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _params_specs_tree(api, mesh):
+    shapes = api.param_shapes()
+    specs = api.param_pspecs()
+    return sds_tree(shapes, specs, mesh)
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool,
+             overrides: Dict[str, Any] | None = None,
+             variant: str = "baseline") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    parallel = parallel_for(cfg, shape, multi_pod, **(overrides or {}))
+    api = build_model(cfg, parallel, mesh)
+
+    t0 = time.time()
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_id,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "recipe": api.recipe,
+        "n_params": api.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+
+    with mesh:
+        if shape.kind == "train":
+            opt = Optimizer(OptConfig(name=parallel.optimizer,
+                                      state_dtype=parallel.opt_state_dtype))
+            step_fn = make_train_step(api, opt)
+            state_shapes = jax.eval_shape(
+                lambda: make_train_state(api, opt, jax.random.key(0)))
+            st_specs = state_pspecs(api, opt)
+            state_in = sds_tree(state_shapes, st_specs, mesh)
+            batch_in = I.batch_specs(api, shape)
+            lowered = jax.jit(step_fn, donate_argnums=(0,)).lower(
+                state_in, batch_in)
+        elif shape.kind == "prefill":
+            params_in = _params_specs_tree(api, mesh)
+            batch_in = I.batch_specs(api, shape)
+            lowered = jax.jit(api.prefill_fn).lower(params_in, batch_in)
+        else:  # decode
+            params_in = _params_specs_tree(api, mesh)
+            caches_in = I.cache_specs(api, shape)
+            tok_in, pos_in = I.decode_token_specs(api, shape)
+            lowered = jax.jit(api.decode_fn, donate_argnums=(1,)).lower(
+                params_in, caches_in, tok_in, pos_in)
+
+        result["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        try:
+            result["memory"] = {
+                "argument_size_bytes": int(mem.argument_size_in_bytes),
+                "output_size_bytes": int(mem.output_size_in_bytes),
+                "temp_size_bytes": int(mem.temp_size_in_bytes),
+                "generated_code_size_bytes": int(
+                    mem.generated_code_size_in_bytes),
+                "alias_size_bytes": int(mem.alias_size_in_bytes),
+            }
+        except AttributeError:
+            result["memory"] = {"repr": str(mem)}
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        # NOTE: XLA cost_analysis counts while (scan) bodies once; keep it for
+        # reference but derive the roofline inputs from the trip-count-aware
+        # HLO analyzer below.
+        result["xla_cost_flops_unscaled"] = float(
+            cost.get("flops", 0.0)) if cost else 0.0
+
+        hlo = compiled.as_text()
+        cd_bytes = 2 if parallel.compute_dtype == "bfloat16" else 0
+        ana = analyze_hlo(hlo, compute_dtype_bytes=cd_bytes)
+        result["flops_per_device"] = float(ana["flops"])
+        result["bytes_per_device"] = float(ana["bytes"])
+        result["bytes_inner_loops_per_device"] = float(
+            ana.get("bytes_inner_loops", 0.0))
+        result["collectives_per_device"] = {
+            "bytes_by_type": ana["collective_bytes"],
+            "counts": ana["collective_counts"],
+            "total_bytes": ana["collective_total"],
+        }
+        result["top_collectives"] = ana.get("top_collectives", [])
+        result["top_bytes_ops"] = ana.get("top_bytes_ops", [])
+        result["hlo_bytes"] = len(hlo)
+
+    print(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="ParallelConfig overrides, e.g. fused_xent=True")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            overrides[k] = json.loads(v.lower() if v in ("True", "False")
+                                      else v)
+        except json.JSONDecodeError:
+            overrides[k] = v
+
+    res = run_cell(args.arch, args.shape, args.multi_pod, overrides,
+                   args.variant)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Perf hillclimb driver: run named variants (ParallelConfig overrides) of a
+dry-run cell and print the roofline deltas vs baseline.
+
+    python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b --shape train_4k \
+        --multi-pod --variant fused_xent fused_xent=true
+
+Variants are cached as results/dryrun/<arch>_<shape>_<mesh>__<variant>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.roofline.report import roofline_row
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+
+def run_variant(arch: str, shape: str, multi_pod: bool, variant: str,
+                overrides: list[str], force: bool = False) -> dict:
+    mesh = "pod2x16x16" if multi_pod else "16x16"
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = os.path.join(OUT, f"{arch}_{shape}_{mesh}{suffix}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", path, "--variant", variant]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    for ov in overrides:
+        cmd += ["--override", ov]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600, cwd=ROOT)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(cells: list[dict]) -> None:
+    base = roofline_row(cells[0])
+    print(f"{'variant':<28} {'compute_s':>10} {'memory_s':>10} "
+          f"{'collect_s':>10} {'dominant':>10} {'temp_gb':>8} {'roofline':>9}")
+    for c in cells:
+        r = roofline_row(c)
+        print(f"{r['variant']:<28} {r['compute_s']:>10} {r['memory_s']:>10} "
+              f"{r['collective_s']:>10} {r['dominant']:>10} "
+              f"{r['mem_temp_gb']:>8} {r['roofline_fraction']:>9}")
+    print("\ntop collectives (baseline):")
+    for t in cells[0].get("top_collectives", [])[:8]:
+        print(f"  {t['bytes']/2**30:8.2f} GiB  {t['kind']:<18} x{t['mult']:.0f}"
+              f"  {t['sig']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", nargs="+", action="append", default=[],
+                    metavar="NAME OVERRIDE...",
+                    help="variant name followed by k=v overrides")
+    args = ap.parse_args()
+
+    cells = [run_variant(args.arch, args.shape, args.multi_pod, "baseline",
+                         [], force=False)]
+    for spec in args.variant:
+        name, overrides = spec[0], spec[1:]
+        cells.append(run_variant(args.arch, args.shape, args.multi_pod,
+                                 name, overrides, force=args.force))
+    compare(cells)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins for every model input + KV cache per
+(architecture x shape) — weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.model import ModelApi
+from repro.models.whisper import MAX_DECODER_POS
+
+
+def _sds(shape, dtype, api: ModelApi, logical):
+    sharding = api.rules_a.sharding(logical, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(api: ModelApi, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for train (kind=train) or prefill (kind=prefill)."""
+    cfg = api.cfg
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out: Dict[str, Any] = {
+        "tokens": _sds((B, S), jnp.int32, api, ("batch", None)),
+    }
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32, api, ("batch", None))
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_vision_tokens, cfg.d_model), cd, api,
+                              ("batch", None, None))
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.n_encoder_frames, cfg.d_model), cd, api,
+                             ("batch", None, None))
+    return out
+
+
+def decode_token_specs(api: ModelApi, shape: ShapeConfig):
+    B = shape.global_batch
+    return (_sds((B, 1), jnp.int32, api, ("batch", None)),
+            _sds((B,), jnp.int32, api, ("batch",)))
+
+
+def _attn_cache_specs(api: ModelApi, n_layers: int, B: int, S: int):
+    cfg = api.cfg
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    lg = (None, "batch", "kv_seq", None, None)
+    shp = (n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": _sds(shp, cd, api, lg), "v": _sds(shp, cd, api, lg)}
+
+
+def cache_specs(api: ModelApi, shape: ShapeConfig) -> Any:
+    """KV/state cache pytree matching ``ModelApi.decode_fn``'s structure."""
+    cfg = api.cfg
+    B, S = shape.global_batch, shape.seq_len
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        return _attn_cache_specs(api, cfg.n_layers, B, S)
+
+    if fam == "ssm":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        H = s.n_heads(cfg.d_model)
+        N, P_, W = s.state_dim, s.head_dim, s.conv_width
+        Lr = cfg.n_layers
+        return {
+            "conv_x": _sds((Lr, B, W - 1, di), cd, api,
+                           (None, "batch", None, "ssm_inner")),
+            "conv_B": _sds((Lr, B, W - 1, N), cd, api,
+                           (None, "batch", None, None)),
+            "conv_C": _sds((Lr, B, W - 1, N), cd, api,
+                           (None, "batch", None, None)),
+            "h": _sds((Lr, B, H, P_, N), jnp.float32, api,
+                      (None, "batch", "ssm_heads", None, None)),
+        }
+
+    if fam == "hybrid":
+        g = cfg.rglru
+        Wd = g.lru_width or cfg.d_model
+        plen = len(g.pattern)
+        n_groups, tail = divmod(cfg.n_layers, plen)
+
+        def rec_cache(n):
+            return {
+                "conv": _sds((n, B, g.conv_width - 1, Wd), cd, api,
+                             (None, "batch", None, "lru")),
+                "h": _sds((n, B, Wd), jnp.float32, api,
+                          (None, "batch", "lru")),
+            }
+
+        groups: Dict[str, Any] = {}
+        for i, kind in enumerate(g.pattern):
+            key = f"{kind}{i}"
+            if kind == "rec":
+                groups[key] = rec_cache(n_groups)
+            else:
+                groups[key] = _attn_cache_specs(api, n_groups, B, S)
+        out = {"groups": groups}
+        if tail:
+            out["tail"] = rec_cache(tail)
+        return out
+
+    if fam == "audio":
+        L = cfg.n_layers
+        F = cfg.n_encoder_frames
+        lg = (None, "batch", None, None, None)
+        return {
+            "self": _attn_cache_specs(api, L, B, min(S, MAX_DECODER_POS)),
+            "cross_k": _sds((L, B, F, cfg.n_kv_heads, cfg.head_dim), cd, api, lg),
+            "cross_v": _sds((L, B, F, cfg.n_kv_heads, cfg.head_dim), cd, api, lg),
+        }
+    raise ValueError(fam)

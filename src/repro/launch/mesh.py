@@ -1,0 +1,23 @@
+"""Mesh construction for single-pod (16x16 = 256 chips) and multi-pod
+(2 pods x 256 = 512 chips) deployments.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — crucial because ``dryrun.py`` must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,87 @@
+"""Dry-run sweep driver: every (arch x shape) cell on the single-pod mesh +
+the multi-pod mesh, cached as results/dryrun/*.json. Each cell runs in a
+fresh subprocess (jax pins the forced device count at first init).
+
+    python -m repro.launch.sweep [--multi-pod-only] [--force] [--cells a:b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import valid_cells
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "pod2x16x16" if multi_pod else "16x16"
+    return os.path.join(OUT, f"{arch}_{shape}_{mesh}.json")
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, force: bool,
+            timeout: int = 3600) -> dict:
+    path = cell_path(arch, shape, multi_pod)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return {"cached": True, **json.load(f)}
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", path]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    t0 = time.time()
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout, cwd=ROOT)
+    if proc.returncode != 0:
+        return {"error": proc.stderr[-2000:], "arch": arch, "shape": shape,
+                "multi_pod": multi_pod, "wall_s": time.time() - t0}
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    runnable, skipped = valid_cells()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "skipped.json"), "w") as f:
+        json.dump({f"{a}|{s}": r for (a, s), r in skipped.items()}, f,
+                  indent=1)
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in runnable:
+            t0 = time.time()
+            res = run_one(arch, shape, multi_pod, args.force)
+            tag = "pod2x16x16" if multi_pod else "16x16"
+            if "error" in res:
+                failures.append((arch, shape, tag))
+                print(f"[FAIL] {arch} {shape} {tag}: {res['error'][-400:]}",
+                      flush=True)
+            else:
+                cached = " (cached)" if res.get("cached") else ""
+                print(f"[ok] {arch} {shape} {tag} compile={res['compile_s']}s"
+                      f" wall={time.time()-t0:.0f}s{cached}", flush=True)
+    print(f"\nSWEEP DONE failures={len(failures)}: {failures}")
+
+
+if __name__ == "__main__":
+    main()

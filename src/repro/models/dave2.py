@@ -1,0 +1,59 @@
+"""DAVE-2 CNN (DeepPicar) — the paper's real-time control workload.
+
+5 conv + 3 fc + steering output, 200x66 RGB input (Bojarski et al. 2016,
+as used by DeepPicar and RT-Gang §II/§V-C). Pure JAX; used by the Fig.1 and
+Fig.6 benchmarks as the RT gang workload on the executor.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.deeppicar import Dave2Config
+from repro.models import layers as L
+
+
+def dave2_defs(cfg: Dave2Config) -> Dict[str, L.ParamDef]:
+    defs: Dict[str, L.ParamDef] = {}
+    h, w = cfg.input_hw
+    c_in = cfg.in_channels
+    for i, (c_out, k, s) in enumerate(cfg.conv):
+        defs[f"conv{i}_w"] = L.ParamDef((k, k, c_in, c_out),
+                                        (None, None, None, None))
+        defs[f"conv{i}_b"] = L.ParamDef((c_out,), (None,), "zeros")
+        h = (h - k) // s + 1
+        w = (w - k) // s + 1
+        c_in = c_out
+    flat = h * w * c_in
+    dims = (flat,) + cfg.fc + (cfg.n_outputs,)
+    for i in range(len(dims) - 1):
+        defs[f"fc{i}_w"] = L.ParamDef((dims[i], dims[i + 1]), (None, None))
+        defs[f"fc{i}_b"] = L.ParamDef((dims[i + 1],), (None,), "zeros")
+    return defs
+
+
+def dave2_apply(cfg: Dave2Config, params, images):
+    """images: (B, H, W, 3) -> steering angle (B, 1)."""
+    x = images
+    for i, (c_out, k, s) in enumerate(cfg.conv):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], window_strides=(s, s), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jnp.tanh(x + params[f"conv{i}_b"])
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fc) + 1
+    for i in range(n_fc):
+        x = x @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+        if i < n_fc - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def make_dave2(cfg: Dave2Config = Dave2Config(), rng=None):
+    defs = dave2_defs(cfg)
+    rng = rng if rng is not None else jax.random.key(0)
+    params = L.init_params(rng, defs, jnp.float32)
+    fn = jax.jit(lambda p, x: dave2_apply(cfg, p, x))
+    return params, fn

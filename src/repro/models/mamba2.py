@@ -1,0 +1,198 @@
+"""Mamba2 / SSD (state-space duality) blocks. [arXiv:2405.21060]
+
+Per head h (H = d_inner/P heads, state size N):
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t (x) x_t        (N x P outer)
+    y_t = C_t . h_t + D * x_t
+with scalar A<0 per head, B_t/C_t shared across heads (n_groups=1), gated
+RMSNorm on the output and a causal depthwise conv on (x, B, C) inputs.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk state scan) — the same decomposition the ``ssd_scan`` Pallas
+kernel implements on TPU. Decode is the O(1) recurrent update.
+
+TP sharding: d_inner and heads over ``model``; B/C (state dim) replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+def ssm_block_defs(cfg: ModelConfig) -> Dict[str, L.ParamDef]:
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    N, W = s.state_dim, s.conv_width
+    return {
+        "ln": L.ParamDef((D,), ("embed",), "ones"),
+        "in_x": L.ParamDef((D, di), ("embed", "ssm_inner")),
+        "in_z": L.ParamDef((D, di), ("embed", "ssm_inner")),
+        "in_B": L.ParamDef((D, N), ("embed", None)),
+        "in_C": L.ParamDef((D, N), ("embed", None)),
+        "in_dt": L.ParamDef((D, H), ("embed", "ssm_heads")),
+        "conv_x": L.ParamDef((W, di), (None, "ssm_inner"), "normal", 0.5),
+        "conv_B": L.ParamDef((W, N), (None, None), "normal", 0.5),
+        "conv_C": L.ParamDef((W, N), (None, None), "normal", 0.5),
+        "dt_bias": L.ParamDef((H,), ("ssm_heads",), "zeros"),
+        "A_log": L.ParamDef((H,), ("ssm_heads",), "zeros"),
+        "D_skip": L.ParamDef((H,), ("ssm_heads",), "ones"),
+        "gn": L.ParamDef((di,), ("ssm_inner",), "ones"),
+        "out": L.ParamDef((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). state: (B,W-1,C) tail of
+    previous tokens (decode). Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, Bm, Cm, A, h0=None, chunk=256):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); dt: (B,S,H) (post-softplus); Bm, Cm: (B,S,N); A: (H,) < 0.
+    h0: optional (B,H,P,N) initial state.
+    Returns y: (B,S,H,P), h_final: (B,H,P,N). All math fp32.
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad with dt=0 tokens: decay exp(0)=1 and zero input contribution,
+        # so state and earlier outputs are unaffected.
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    f32 = jnp.float32
+    xh = xh.astype(f32)
+    dt = dt.astype(f32)
+    Bm = Bm.astype(f32)
+    Cm = Cm.astype(f32)
+
+    xb = xh.reshape(Bsz, nc, Q, H, P)
+    db = dt.reshape(Bsz, nc, Q, H)
+    Bb = Bm.reshape(Bsz, nc, Q, N)
+    Cb = Cm.reshape(Bsz, nc, Q, N)
+
+    # log-decay within chunk: L[t] = sum_{u<=t} A*dt_u   (B,nc,Q,H)
+    logd = db * A[None, None, None, :]
+    Lc = jnp.cumsum(logd, axis=2)
+    Ltot = Lc[:, :, -1, :]                       # (B,nc,H)
+
+    # intra-chunk quadratic form
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)   # (B,nc,Q,Q)
+    # decay(i,j) = exp(L_i - L_j) for j<=i
+    diff = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    M = jnp.where(causal, jnp.exp(diff), 0.0)
+    M = M * CB[..., None] * db[:, :, None, :, :]            # j-index dt
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xb)
+
+    # per-chunk end-state contribution: sum_j exp(Ltot - L_j) dt_j B_j x_j
+    decay_end = jnp.exp(Ltot[:, :, None, :] - Lc)           # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                         decay_end * db, Bb, xb)            # (B,nc,H,P,N)
+
+    # inter-chunk scan
+    h_init = (jnp.zeros((Bsz, H, P, N), f32) if h0 is None
+              else h0.astype(f32))
+
+    def step(h, inp):
+        s_c, ltot, c_blk, l_blk = inp
+        # y_inter[i] = C_i . (exp(L_i) * h)
+        y_in = jnp.einsum("bqn,bqh,bhpn->bqhp", c_blk, jnp.exp(l_blk), h)
+        h_new = jnp.exp(ltot)[:, :, None, None] * h + s_c
+        return h_new, y_in
+
+    xs = (S_chunk.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2),
+          Cb.transpose(1, 0, 2, 3), Lc.transpose(1, 0, 2, 3))
+    h_final, y_inter = jax.lax.scan(step, h_init, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)              # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y[:, :S_orig], h_final
+
+
+def ssm_block_apply(ctx, p, x, cache: Optional[dict] = None):
+    """x: (B,S,D). Returns (x_out, new_cache)."""
+    cfg = ctx.cfg
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    N, P, W = s.state_dim, s.head_dim, s.conv_width
+    Bsz, S, _ = x.shape
+
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.recipe == "tp" and ctx.mode != "decode":
+        h = constrain(h, ctx.rules, ("batch", None, None))
+
+    z = h @ p["in_z"]
+    xin = h @ p["in_x"]
+    Bm = h @ p["in_B"]
+    Cm = h @ p["in_C"]
+    dt = h @ p["in_dt"]
+
+    conv_cache = cache if cache is not None else {}
+    xin, cx = _causal_conv(xin, p["conv_x"], conv_cache.get("conv_x"))
+    Bm, cB = _causal_conv(Bm, p["conv_B"], conv_cache.get("conv_B"))
+    Cm, cC = _causal_conv(Cm, p["conv_C"], conv_cache.get("conv_C"))
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(xin.dtype)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32)).astype(Bm.dtype)
+    Cm = jax.nn.silu(Cm.astype(jnp.float32)).astype(Cm.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(Bsz, S, H, P)
+    xh = constrain(xh, ctx.rules, ("batch", None, "ssm_heads", None))
+
+    if ctx.mode == "decode":
+        assert cache is not None and S == 1
+        h0 = cache["h"].astype(jnp.float32)                 # (B,H,P,N)
+        da = jnp.exp(dt[:, 0] * A[None, :])                 # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0],
+                         xh[:, 0].astype(jnp.float32))
+        h_new = da[:, :, None, None] * h0 + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h_new)[:, None]
+        new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC,
+                     "h": h_new}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_fin = _ssd_chunked(xh, dt, Bm, Cm, A, h0=h0, chunk=s.chunk)
+        y = y.reshape(Bsz, S, H, P)
+        new_cache = None
+        if ctx.mode == "prefill":
+            new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "h": h_fin}
+
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32)
+    y = y.reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(y.astype(x.dtype), p["gn"], cfg.norm_eps)
+    out = y @ p["out"]
+    out = constrain(out, ctx.rules, ("batch", "seq", None))
+    return x + out, new_cache

@@ -1,0 +1,145 @@
+"""RG-LRU recurrent block + hybrid assembly (RecurrentGemma / Griffin).
+
+Griffin residual block = temporal mixer (RG-LRU recurrence OR local MQA
+attention) + MLP. RG-LRU per channel c:
+
+    r_t = sigmoid(W_a x_t)            (recurrence gate, block-diagonal W)
+    i_t = sigmoid(W_x x_t)            (input gate, block-diagonal W)
+    log a_t = -c_exp * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Block-diagonal gate weights use n_heads blocks aligned to the ``model`` mesh
+axis so the whole recurrence is shard-local under TP. Training/prefill uses
+``jax.lax.associative_scan`` (the ``rglru_scan`` Pallas kernel implements the
+chunked linear-time version for TPU); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import attn_defs, attn_apply, mlp_defs, mlp_apply
+from repro.sharding.partition import constrain
+
+
+def _n_blocks(cfg: ModelConfig) -> int:
+    return max(cfg.n_heads, 1)
+
+
+def rglru_mixer_defs(cfg: ModelConfig) -> Dict[str, L.ParamDef]:
+    assert cfg.rglru is not None
+    g = cfg.rglru
+    D = cfg.d_model
+    Wd = g.lru_width or D
+    nb = _n_blocks(cfg)
+    bw = Wd // nb
+    return {
+        "ln": L.ParamDef((D,), ("embed",), "ones"),
+        "w_gate_branch": L.ParamDef((D, Wd), ("embed", "lru")),
+        "w_x_branch": L.ParamDef((D, Wd), ("embed", "lru")),
+        "conv": L.ParamDef((g.conv_width, Wd), (None, "lru"), "normal", 0.5),
+        # block-diagonal gates: (nb, bw, bw), nb aligned to model axis
+        "w_a": L.ParamDef((nb, bw, bw), ("lru_blocks", None, None)),
+        "b_a": L.ParamDef((nb, bw), ("lru_blocks", None), "zeros"),
+        "w_i": L.ParamDef((nb, bw, bw), ("lru_blocks", None, None)),
+        "b_i": L.ParamDef((nb, bw), ("lru_blocks", None), "zeros"),
+        "lam": L.ParamDef((Wd,), ("lru",), "ones"),
+        "w_out": L.ParamDef((Wd, D), ("lru", "embed")),
+    }
+
+
+def rec_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"mix": rglru_mixer_defs(cfg), "mlp": mlp_defs(cfg)}
+
+
+def _block_diag_apply(x, w, b, nb):
+    """x: (B,S,Wd) -> (B,S,Wd) with block-diagonal weight (nb,bw,bw)."""
+    B, S, Wd = x.shape
+    bw = Wd // nb
+    xb = x.reshape(B, S, nb, bw)
+    y = jnp.einsum("bsnw,nwv->bsnv", xb, w) + b[None, None]
+    return y.reshape(B, S, Wd)
+
+
+def _rglru_scan(log_a, gx, h0=None):
+    """Associative linear recurrence h_t = a_t h_{t-1} + gx_t.
+
+    log_a, gx: (B,S,W) fp32. h0: (B,W) or None. Returns (h_all (B,S,W),
+    h_last (B,W))."""
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        gx = gx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return hh, hh[:, -1]
+
+
+def rglru_mixer_apply(ctx, p, x, cache: Optional[dict] = None):
+    cfg = ctx.cfg
+    g = cfg.rglru
+    nb = _n_blocks(cfg)
+    B, S, D = x.shape
+
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.recipe == "tp" and ctx.mode != "decode":
+        h = constrain(h, ctx.rules, ("batch", None, None))
+
+    gate = L.gelu(h @ p["w_gate_branch"])
+    xb = h @ p["w_x_branch"]
+    conv_state = cache.get("conv") if cache else None
+    xb, conv_new = L_causal_conv(xb, p["conv"], conv_state)
+
+    xb = constrain(xb, ctx.rules, ("batch", None, "lru"))
+    r = jax.nn.sigmoid(_block_diag_apply(xb, p["w_a"], p["b_a"], nb)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_apply(xb, p["w_i"], p["b_i"], nb)
+                       .astype(jnp.float32))
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = -g.c_exponent * lam[None, None, :] * r
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xb.astype(jnp.float32))
+
+    if ctx.mode == "decode":
+        assert cache is not None and S == 1
+        h_prev = cache["h"].astype(jnp.float32)             # (B, Wd)
+        h_new = jnp.exp(log_a[:, 0]) * h_prev + gated_x[:, 0]
+        y = h_new[:, None]
+        new_cache = {"conv": conv_new, "h": h_new}
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache else None
+        y, h_last = _rglru_scan(log_a, gated_x, h0)
+        new_cache = ({"conv": conv_new, "h": h_last}
+                     if ctx.mode == "prefill" else None)
+
+    y = (y.astype(x.dtype) * gate) @ p["w_out"]
+    y = constrain(y, ctx.rules, ("batch", "seq", None))
+    return x + y, new_cache
+
+
+def rec_block_apply(ctx, p, x, cache=None):
+    x, new_cache = rglru_mixer_apply(ctx, p["mix"], x, cache)
+    x = mlp_apply(ctx, p["mlp"], x)
+    return x, new_cache
+
+
+def attn_block_defs_rg(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"attn": attn_defs(cfg), "mlp": mlp_defs(cfg)}
+
+
+def attn_block_apply_rg(ctx, p, x, cache=None):
+    x, new_cache = attn_apply(ctx, p["attn"], x, cache)
+    x = mlp_apply(ctx, p["mlp"], x)
+    return x, new_cache
+
+
+# local import indirection to avoid a cycle with mamba2 (shared conv)
+from repro.models.mamba2 import _causal_conv as L_causal_conv  # noqa: E402

@@ -1,0 +1,137 @@
+"""Whisper-base encoder-decoder backbone. [arXiv:2212.04356]
+
+The mel/conv frontend is a STUB per the brief: the model consumes precomputed
+frame embeddings (B, n_frames, d_model). The transformer backbone is real:
+pre-LN, learned decoder positions, sinusoidal encoder positions, GELU MLPs,
+MHA with biases. Decode uses a self-attention KV cache plus per-layer
+cross-attention K/V precomputed from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (Ctx, attn_defs, attn_apply, mlp_defs,
+                                      mlp_apply, _norm, _qkv)
+from repro.sharding.partition import constrain
+
+MAX_DECODER_POS = 32768  # assigned decode_32k shape exceeds whisper's 448
+
+
+def enc_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"attn": attn_defs(cfg), "mlp": mlp_defs(cfg)}
+
+
+def dec_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"self": attn_defs(cfg), "cross": attn_defs(cfg),
+            "mlp": mlp_defs(cfg)}
+
+
+def whisper_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": L.ParamDef((V, D), ("vocab", "embed")),
+        "pos_dec": L.ParamDef((MAX_DECODER_POS, D), (None, "embed"),
+                              "normal", 0.02),
+        "enc_blocks": L.stack_defs(enc_block_defs(cfg), cfg.n_encoder_layers),
+        "enc_ln": L.ParamDef((D,), ("embed",), "ones"),
+        "enc_ln_b": L.ParamDef((D,), ("embed",), "zeros"),
+        "dec_blocks": L.stack_defs(dec_block_defs(cfg), cfg.n_layers),
+        "final_ln": L.ParamDef((D,), ("embed",), "ones"),
+        "final_ln_b": L.ParamDef((D,), ("embed",), "zeros"),
+    }
+
+
+def _enc_attn(ctx: Ctx, p, x):
+    """Non-causal encoder self-attention (frames are short: materialized)."""
+    cfg = ctx.cfg
+    h = L.layer_norm(x, p["ln"], p["ln_b"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h)
+    out = L.masked_attention(q, k, v, causal=False)
+    B, S = x.shape[0], x.shape[1]
+    return x + out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def _cross_attn(ctx: Ctx, p, x, enc_kv):
+    """Decoder cross-attention. enc_kv: (k, v) each (B, F, H, Dh)."""
+    cfg = ctx.cfg
+    h = L.layer_norm(x, p["ln"], p["ln_b"], cfg.norm_eps)
+    B, S = h.shape[0], h.shape[1]
+    q = (h @ p["wq"]) + p["bq"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k, v = enc_kv
+    out = L.masked_attention(q, k, v, causal=False)
+    return x + out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def _cross_kv(cfg: ModelConfig, p, enc_out):
+    B, F = enc_out.shape[0], enc_out.shape[1]
+    k = ((enc_out @ p["wk"]) + p["bk"]).reshape(B, F, cfg.n_kv_heads,
+                                                cfg.head_dim)
+    v = ((enc_out @ p["wv"]) + p["bv"]).reshape(B, F, cfg.n_kv_heads,
+                                                cfg.head_dim)
+    return k, v
+
+
+def encode(ctx: Ctx, params, frames):
+    """frames: (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    cfg = ctx.cfg
+    F = frames.shape[1]
+    x = frames + L.sinusoidal_positions(F, cfg.d_model, frames.dtype)[None]
+    x = constrain(x, ctx.rules, ("batch", None, None))
+
+    def body(carry, blk):
+        y = _enc_attn(ctx, blk["attn"], carry)
+        y = mlp_apply(ctx, blk["mlp"], y)
+        return y, None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.layer_norm(x, params["enc_ln"], params["enc_ln_b"], cfg.norm_eps)
+
+
+def decoder_embed(ctx: Ctx, params, tokens, positions, compute_dtype):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.take(params["pos_dec"], positions, axis=0)
+    return (x + pos).astype(compute_dtype)
+
+
+def run_decoder_train(ctx: Ctx, params, x, enc_out):
+    """Training/prefill pass over decoder blocks. Returns (x, caches)."""
+    collect = ctx.mode == "prefill"
+
+    def body(carry, blk):
+        y, self_cache = attn_apply(ctx, blk["self"], carry)
+        ekv = _cross_kv(ctx.cfg, blk["cross"], enc_out)
+        y = _cross_attn(ctx, blk["cross"], y, ekv)
+        y = mlp_apply(ctx, blk["mlp"], y)
+        out = None
+        if collect:
+            out = {"self": self_cache, "cross_k": ekv[0], "cross_v": ekv[1]}
+        return y, out
+
+    if not collect:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    return x, caches
+
+
+def run_decoder_decode(ctx: Ctx, params, x, cache):
+    """One-token decode. cache: stacked per-layer {self:{k,v}, cross_k/v}."""
+    def body(carry, blk_and_cache):
+        blk, c = blk_and_cache
+        y, new_self = attn_apply(ctx, blk["self"], carry, cache=c["self"])
+        B = y.shape[0]
+        kv_len = jnp.full((B,), c["cross_k"].shape[1], jnp.int32)
+        y, _ = attn_apply(ctx, blk["cross"], y,
+                          kv_override=(c["cross_k"], c["cross_v"], kv_len))
+        y = mlp_apply(ctx, blk["mlp"], y)
+        return y, {"self": new_self, "cross_k": c["cross_k"],
+                   "cross_v": c["cross_v"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    return x, new_cache

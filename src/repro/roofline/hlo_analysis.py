@@ -1,0 +1,397 @@
+"""Trip-count-aware HLO cost analysis from post-partitioning HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits while-loop bodies ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes by ~n_layers. This module
+re-derives the three roofline inputs from ``compiled.as_text()``:
+
+* ``flops``  — dot/convolution FLOPs per computation, multiplied through the
+  call graph (while bodies get their trip count, parsed from the loop
+  condition's comparison constant; nested scans multiply; fusions/calls
+  inherit the caller's multiplier).
+* ``bytes``  — fusion-boundary traffic: every top-level op in a non-fused
+  computation reads its operands and writes its output once; ops inside
+  fused computations are not materialized and are skipped.
+* ``collective_bytes`` — per-primitive output-shape bytes (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Operand shapes are resolved via a per-computation symbol table (the CPU
+backend prints bare ``%name`` operand references). Validated in
+tests/test_roofline.py against hand-computable cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def shape_bytes(sig: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(sig: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(sig)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_sig: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]            # param name -> sig
+    ops: List[Op]
+    symbols: Dict[str, str]           # op name -> out sig
+    is_fused: bool
+
+
+_COMP_HDR = re.compile(
+    r"^\s*(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\((?P<params>.*)\)\s*->\s*(?P<ret>.+?)\s*\{\s*$")
+# out_sig may be a (nested) tuple type: match lazily up to " kind(".
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                name = m.group(1).lstrip("%")
+                params = {pm.group(1): pm.group(2)
+                          for pm in _PARAM_RE.finditer(m.group("params"))}
+                cur = Computation(name=name, params=params, ops=[],
+                                  symbols=dict(params),
+                                  is_fused="fused" in name)
+                comps[name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, out_sig, kind = m.group(1), m.group(2).strip(), m.group(3)
+        # operand names: inside the first (...) after the op kind,
+        # up to the matching close paren (approx: stop at "), ")
+        idx = line.find(kind + "(")
+        operand_str = line[idx + len(kind) + 1:] if idx >= 0 else ""
+        # cut at the paren that closes the operand list
+        depth = 1
+        end = 0
+        for i, ch in enumerate(operand_str):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = operand_str[:end]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = Op(name=name, kind=kind, out_sig=out_sig, operands=operands,
+                line=line)
+        cur.ops.append(op)
+        cur.symbols[name] = out_sig
+    return comps
+
+
+_SINGLE_ROLE_RE = {
+    role: re.compile(role + r"=%?([\w\.\-]+)")
+    for role in ("body", "condition", "calls", "to_apply")}
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_comps(op: Op) -> List[Tuple[str, str]]:
+    out = []
+    for role, rx in _SINGLE_ROLE_RE.items():
+        m = rx.search(op.line)
+        if m:
+            out.append((role, m.group(1)))
+    m = _BRANCH_RE.search(op.line)
+    if m:
+        for nm in m.group(1).split(","):
+            nm = nm.strip().lstrip("%")
+            if nm:
+                out.append(("branch", nm))
+    return out
+
+
+def _while_trip_count(cond: Computation) -> int:
+    consts = []
+    for op in cond.ops:
+        m = re.search(r"constant\((\d+)\)", op.line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> int:
+    out_dims = _first_shape_dims(op.out_sig)
+    if out_dims is None or not op.operands:
+        return 0
+    lhs_sig = symbols.get(op.operands[0], "")
+    lhs_dims = _first_shape_dims(lhs_sig) or []
+    m = re.search(r"lhs_contracting_dims=\{([0-9, ]*)\}", op.line)
+    contracted = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            idx = idx.strip()
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    return 2 * out_elems * contracted
+
+
+def _conv_flops(op: Op, symbols: Dict[str, str]) -> int:
+    out_dims = _first_shape_dims(op.out_sig)
+    if out_dims is None or len(op.operands) < 2:
+        return 0
+    k_dims = _first_shape_dims(symbols.get(op.operands[1], "")) or []
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    kernel = 1
+    for d in k_dims[:-1]:
+        kernel *= d
+    return 2 * out_elems * kernel
+
+
+# Ops that *materialize* HBM traffic on TPU. Everything else (elementwise,
+# broadcast, convert, compare, select, ...) fuses into a neighbor on the TPU
+# backend; XLA:CPU additionally rewrites bf16 GEMMs as convert-to-f32 + f32
+# dot, which must not be charged as real traffic (TPU MXUs read bf16
+# natively) — hence operand resolution through converts below.
+_MATERIALIZING_KINDS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "sort", "concatenate",
+    "pad", "copy", "transpose", "custom-call", "rng", "rng-bit-generator",
+    "cholesky", "triangular-solve", "fft", "select-and-scatter",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def analyze(hlo: str, *, compute_dtype_bytes: int = 0) -> Dict[str, object]:
+    """``compute_dtype_bytes``: if nonzero (e.g. 2 for bf16 models), f32
+    collective payloads are charged at this width — XLA:CPU's bf16->f32 dot
+    rewrite makes psums of matmul outputs f32 here, while the TPU backend
+    keeps them in the compute dtype."""
+    comps = parse_computations(hlo)
+
+    def coll_sig_bytes(sig: str) -> int:
+        if not compute_dtype_bytes:
+            return shape_bytes(sig)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(sig):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            width = _DTYPE_BYTES[dt]
+            if dt == "f32":
+                width = min(width, compute_dtype_bytes)
+            total += n * width
+        return total
+
+    callees = set()
+    for c in comps.values():
+        for op in c.ops:
+            for _, nm in _called_comps(op):
+                callees.add(nm)
+    entries = [n for n in comps if n not in callees]
+
+    mult: Dict[str, float] = {}
+    loop_depth: Dict[str, int] = {}
+    work: List[Tuple[str, float, int]] = [(n, 1.0, 0) for n in entries]
+    # propagate multipliers through the call graph (DAG in valid HLO);
+    # track while-nest depth: depth>=2 computations are inner loops of a
+    # scanned layer (flash-attention kv/q scans, SSD chunk scans) — the
+    # traffic the Pallas kernels keep in VMEM on TPU.
+    while work:
+        name, m, d = work.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        mult[name] = mult.get(name, 0.0) + m
+        loop_depth[name] = max(loop_depth.get(name, 0), d)
+        for op in comp.ops:
+            called = _called_comps(op)
+            trip = 1
+            cond_name = next((nm for r, nm in called if r == "condition"),
+                             None)
+            if cond_name and cond_name in comps:
+                trip = _while_trip_count(comps[cond_name])
+            for role, nm in called:
+                if nm not in comps:
+                    continue
+                if role == "body":
+                    work.append((nm, m * trip, d + 1))
+                else:
+                    work.append((nm, m, d))
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_bytes = {c: 0.0 for c in COLLECTIVES}
+    coll_counts = {c: 0.0 for c in COLLECTIVES}
+    coll_items: List[Tuple[float, str, float, str]] = []
+    bytes_items: List[Tuple[float, str, float, str]] = []
+
+    bytes_inner = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        is_inner = loop_depth.get(name, 0) >= 2
+        producers = {op.name: op for op in comp.ops}
+
+        def _elems(sig: str) -> int:
+            d = _first_shape_dims(sig)
+            if d is None:
+                return -1
+            n = 1
+            for x in d:
+                n *= x
+            return n
+
+        def _is_convert_like(op: Op) -> Optional[str]:
+            """If op is a dtype-convert (or a fusion that merely converts /
+            slices-and-converts a larger-dtype view of one operand), return
+            that operand's name."""
+            if op.kind == "convert" and op.operands:
+                return op.operands[0]
+            if op.kind == "fusion" and op.operands:
+                out_n = _elems(op.out_sig)
+                for o in op.operands:
+                    sig = comp.symbols.get(o, "")
+                    if sig and _elems(sig) == out_n and \
+                            shape_bytes(sig) < shape_bytes(op.out_sig):
+                        return o
+            return None
+
+        def through_convert(opnd_name: str) -> str:
+            """Resolve an operand through CPU-inserted bf16->f32 converts
+            (bare or fused) to the original buffer's signature — TPU MXUs
+            read bf16 directly, so the f32 copies are CPU artifacts."""
+            seen = 0
+            cur = opnd_name
+            while seen < 4:
+                prod = producers.get(cur)
+                if prod is None:
+                    break
+                nxt = _is_convert_like(prod)
+                if nxt is None:
+                    break
+                cur = nxt
+                seen += 1
+            return comp.symbols.get(cur, comp.symbols.get(opnd_name, ""))
+
+        carried = {op.name for op in comp.ops
+                   if op.kind in ("parameter", "get-tuple-element")}
+
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, comp.symbols)
+            elif op.kind == "convolution":
+                flops += m * _conv_flops(op, comp.symbols)
+            kind_base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if kind_base in COLLECTIVES and not op.kind.endswith("-done"):
+                # charge at the *logical* dtype (see compute_dtype_bytes)
+                b = m * coll_sig_bytes(op.out_sig)
+                coll_bytes[kind_base] += b
+                coll_counts[kind_base] += m
+                coll_items.append((b, kind_base, m,
+                                   op.out_sig[:90] + f"  [{name[:40]}]"))
+            if not comp.is_fused and op.kind in _MATERIALIZING_KINDS \
+                    and not op.kind.endswith("-done"):
+                # HBM-traffic proxy: every materializing op writes its output
+                # and a consumer reads it (2x out). GEMMs additionally read
+                # their operands (weights/activations), resolved through
+                # CPU-inserted bf16->f32 converts. Fusion operands are NOT
+                # charged (fusions read slices; out_sig reflects the slice).
+                # Special cases:
+                # * convert-like fusions are CPU dtype artifacts: skip.
+                # * in-place updates of loop-carried state (DUS pattern:
+                #   output shape == a carried operand's shape): charge the
+                #   delta (other operands), not the whole buffer.
+                if _is_convert_like(op) is not None and op.kind == "fusion":
+                    continue
+                inplace_src = None
+                if op.kind in ("fusion", "dynamic-update-slice"):
+                    for o in op.operands:
+                        if o in carried and \
+                                comp.symbols.get(o, "") == op.out_sig:
+                            inplace_src = o
+                            break
+                if inplace_src is not None:
+                    delta = sum(shape_bytes(through_convert(o))
+                                for o in op.operands if o != inplace_src)
+                    b = m * 2 * delta
+                elif op.kind in ("dot", "convolution"):
+                    b = m * (2 * shape_bytes(op.out_sig)
+                             + sum(shape_bytes(through_convert(o))
+                                   for o in op.operands))
+                else:
+                    b = m * 2 * shape_bytes(op.out_sig)
+                bytes_accessed += b
+                if is_inner:
+                    bytes_inner += b
+                if b > 0:
+                    bytes_items.append((b, op.kind, m,
+                                        op.out_sig[:80] + f" [{name[:40]}]"))
+
+    coll_items.sort(reverse=True)
+    top = [{"bytes": b, "kind": k, "mult": m, "sig": s}
+           for b, k, m, s in coll_items[:20]]
+    bytes_items.sort(reverse=True)
+    top_bytes = [{"bytes": b, "kind": k, "mult": m, "sig": s}
+                 for b, k, m, s in bytes_items[:25]]
+
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "bytes_inner_loops": bytes_inner,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "collective_total": float(sum(coll_bytes.values())),
+        "top_collectives": top,
+        "top_bytes_ops": top_bytes,
+        "computations": len(comps),
+        "entry_count": len(entries),
+    }

@@ -1,0 +1,95 @@
+"""Roofline terms from dry-run cells.
+
+Hardware model (TPU v5e, per brief): 197 TFLOP/s bf16 per chip; 819 GB/s HBM;
+~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training step;
+inference steps use 2*N*D_new (+ attention KV reads are in the memory term).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12           # bf16 / chip
+HBM_BW = 819e9                # bytes/s / chip
+ICI_BW = 50e9                 # bytes/s/link (conservative single-link)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one new token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(cell: Dict) -> float:
+    """Useful FLOPs per device for the cell (training: 6*N*D; inference
+    forward-only: 2*N*D)."""
+    n = cell.get("n_active_params") or cell.get("n_params")
+    tokens = SHAPE_TOKENS[cell["shape"]]
+    mult = 6 if cell["shape"].startswith("train") else 2
+    chips = 512 if cell["mesh"].startswith("pod") else 256
+    return mult * n * tokens / chips
+
+
+def roofline_row(cell: Dict) -> Dict:
+    f = cell["flops_per_device"]
+    b = cell["bytes_per_device"]
+    b_inner = cell.get("bytes_inner_loops_per_device", 0.0)
+    # ring all-reduce moves ~2x the payload per link (reduce-scatter +
+    # all-gather phases); AG/RS/A2A move ~1x.
+    by_type = cell["collectives_per_device"]["bytes_by_type"]
+    c = (cell["collectives_per_device"]["total_bytes"]
+         + by_type.get("all-reduce", 0.0))
+    t_compute = f / PEAK_FLOPS
+    t_memory = b / HBM_BW
+    # kernel-adjusted memory term: inner-loop (depth>=2 scan) traffic is what
+    # the Pallas kernels keep in VMEM on TPU (flash attention / SSD chunk
+    # scans); subtracting it bounds the memory term with kernels deployed.
+    t_memory_k = max(b - b_inner, 0.0) / HBM_BW
+    t_collective = c / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory_k,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell)
+    bound = max(terms.values())
+    bound_nok = max(t_compute, t_memory, t_collective)
+    roofline_frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    roofline_frac_nok = (mf / PEAK_FLOPS) / bound_nok if bound_nok > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "variant": cell.get("variant", "baseline"),
+        "compute_s": round(t_compute, 4),
+        "memory_s": round(t_memory, 4),
+        "memory_s_kernel": round(t_memory_k, 4),
+        "collective_s": round(t_collective, 4),
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": f,
+        "useful_flops_ratio": round(mf / f, 3) if f else 0.0,
+        "roofline_fraction": round(roofline_frac, 4),
+        "roofline_fraction_xla_only": round(roofline_frac_nok, 4),
+        "mem_args_gb": round(cell["memory"].get("argument_size_bytes", 0)
+                             / 2**30, 2),
+        "mem_temp_gb": round(cell["memory"].get("temp_size_bytes", 0)
+                             / 2**30, 2),
+        "compile_s": cell.get("compile_s"),
+    }
+
+
+def markdown_table(rows) -> str:
+    if not rows:
+        return "(no dry-run cells found)"
+    cols = ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+            "memory_s_kernel", "collective_s", "dominant",
+            "useful_flops_ratio", "roofline_fraction", "mem_args_gb",
+            "mem_temp_gb"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules -> PartitionSpec (MaxText-style).
+
+Every parameter and key activation in the model stack is annotated with a
+tuple of *logical* axis names.  ``Rules`` maps logical names to mesh axes,
+with conflict resolution (a mesh axis may appear at most once per spec; later
+claims are dropped) and divisibility checks (a dim not divisible by its mesh
+axes falls back to replicated).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class Rules:
+    def __init__(self, table: Dict[str, MeshAxes], mesh: Mesh):
+        self.table = dict(table)
+        self.mesh = mesh
+
+    def axis_size(self, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor with the given logical dim names.
+
+        If ``shape`` is given, any dim not divisible by its mesh-axis product
+        is replicated instead (keeps GSPMD from padding weirdly).
+        """
+        used: set = set()
+        out = []
+        for i, name in enumerate(logical):
+            axes = self.table.get(name) if name else None
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a in self.mesh.shape and a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            if shape is not None:
+                size = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if shape[i] % size != 0:
+                    # try progressively shorter prefixes of the axis tuple
+                    while axes and shape[i] % int(
+                            np.prod([self.mesh.shape[a] for a in axes])) != 0:
+                        axes = axes[:-1]
+                    if not axes:
+                        out.append(None)
+                        continue
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def make_rules(mesh: Mesh, parallel) -> Tuple[Rules, Rules]:
+    """(param_rules, act_rules) for a ParallelConfig on the given mesh."""
+    data_axes: Tuple[str, ...] = (parallel.data_axis,)
+    if parallel.pod_axis and parallel.pod_axis in mesh.shape:
+        batch_axes: MeshAxes = (parallel.pod_axis, parallel.data_axis)
+    else:
+        batch_axes = (parallel.data_axis,)
+    model = parallel.model_axis if parallel.tensor_parallel else None
+
+    fsdp_axes: MeshAxes = None
+    if parallel.fsdp:
+        fsdp_axes = data_axes
+        if parallel.fsdp_pod and parallel.pod_axis and parallel.pod_axis in mesh.shape:
+            fsdp_axes = (parallel.pod_axis, parallel.data_axis)
+
+    param_table: Dict[str, MeshAxes] = {
+        "embed": fsdp_axes,          # d_model dim of weights (ZeRO-3 style)
+        "vocab": model,
+        "vocab_in": fsdp_axes,       # untied input table: rows over fsdp,
+        "embed_in": model,           # cols over model (gather stays local)
+        "heads": model,              # flattened q_dim
+        "kv": model,                 # flattened kv_dim
+        "mlp": model,
+        "experts": model if parallel.expert_parallel else None,
+        "expert_mlp": data_axes,     # weight-stationary MoE: d_ff over data
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "ssm_state": None,
+        "lru": model,
+        "lru_blocks": model,
+        "conv": None,
+        "layers": None,              # scan dim
+        "frames": None,
+    }
+    act_table: Dict[str, MeshAxes] = {
+        "batch": batch_axes,
+        "seq": model if parallel.sequence_parallel else None,
+        "kv_seq": model if parallel.shard_kv_seq_on_decode else None,
+        "heads": model,
+        "kv": model,
+        "mlp": model,
+        "vocab": model,
+        "experts": model if parallel.expert_parallel else None,
+        "embed": None,
+        "ssm_inner": model,
+        "ssm_heads": model,
+        "lru": model,
+        "frames": None,
+    }
+    return Rules(param_table, mesh), Rules(act_table, mesh)
+
+
+def constrain(x, rules: Rules, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical names (no-op outside a mesh ctx)."""
+    try:
+        spec = rules.spec(logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    except (ValueError, TypeError):
+        return x
+
+
+def tree_specs(logical_tree, rules: Rules, shape_tree):
+    """Map a pytree of logical tuples + shapes -> pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda lg, sh: rules.spec(lg, sh.shape if hasattr(sh, "shape") else sh),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

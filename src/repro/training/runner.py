@@ -1,0 +1,97 @@
+"""Fault-tolerant training runner: checkpoint/restart, deterministic data
+resume, simulated failures, straggler accounting, async checkpointing.
+
+This is the host-side control loop a pod worker runs; on a real fleet every
+host executes it identically (single-controller-per-host JAX SPMD). Failure
+recovery = process restart + ``resume()`` from the latest complete
+checkpoint; elastic restarts may use a different mesh (ckpt re-shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data.pipeline import DataConfig, ShardedLoader, TokenSource
+from repro.models.model import ModelApi
+from repro.training.optimizer import OptConfig, Optimizer
+from repro.training.step import (make_train_state, make_train_step,
+                                 state_pspecs)
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: Optional[int] = None     # simulate a node failure
+    straggler_factor: float = 3.0
+
+
+class TrainRunner:
+    def __init__(self, api: ModelApi, opt: Optimizer, data_cfg: DataConfig,
+                 run_cfg: RunnerConfig, batch_axes=("data",)):
+        self.api = api
+        self.opt = opt
+        self.run_cfg = run_cfg
+        self.ckpt = CheckpointManager(run_cfg.ckpt_dir, keep=run_cfg.keep)
+        self.loader = ShardedLoader(TokenSource(data_cfg), api.mesh,
+                                    batch_axes)
+        self.step_fn = jax.jit(make_train_step(api, opt),
+                               donate_argnums=(0,))
+        self.metrics_log: list = []
+        self.straggler_steps: list = []
+        self._ema_dur: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        return make_train_state(self.api, self.opt, jax.random.key(seed))
+
+    def resume_or_init(self, seed: int = 0):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(seed), 0
+        state = self.init_state(seed)  # structure donor
+        state, extra = self.ckpt.restore(state)
+        return state, int(extra.get("data_step", latest))
+
+    # ------------------------------------------------------------------
+    def run(self, state=None, start_step: Optional[int] = None):
+        rc = self.run_cfg
+        if state is None:
+            state, start_step = self.resume_or_init()
+        if start_step is None:
+            start_step = int(np.asarray(state["step"]))
+        it = self.loader.iterate(start_step)
+        with self.api.mesh:
+            for step, batch in it:
+                if step >= rc.total_steps:
+                    break
+                if rc.fail_at_step is not None and step == rc.fail_at_step:
+                    raise SimulatedFailure(f"injected failure at {step}")
+                t0 = time.monotonic()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dur = time.monotonic() - t0
+                if self._ema_dur is not None and \
+                        dur > rc.straggler_factor * self._ema_dur:
+                    self.straggler_steps.append((step, dur))
+                self._ema_dur = dur if self._ema_dur is None else \
+                    0.9 * self._ema_dur + 0.1 * dur
+                self.metrics_log.append({"step": step, "loss": loss,
+                                         "dur_s": dur})
+                if (step + 1) % rc.ckpt_every == 0:
+                    self.ckpt.save(state, step + 1,
+                                   extra={"data_step": step + 1})
+        self.ckpt.wait()
+        return state

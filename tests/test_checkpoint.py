@@ -1,0 +1,104 @@
+"""Checkpoint: exact roundtrip, atomic publication, retention, async save,
+deterministic restart (fault tolerance), elastic re-shard path."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.configs.base import ParallelConfig
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+from repro.training.optimizer import OptConfig, Optimizer
+from repro.training.runner import (RunnerConfig, SimulatedFailure,
+                                   TrainRunner)
+
+
+def state_tree(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"m": jnp.ones((8, 8)) * 0.5,
+                    "count": jnp.int32(7)},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = state_tree()
+    mgr.save(st, 7, extra={"data_step": 7}, blocking=True)
+    restored, extra = mgr.restore(st)
+    assert extra["data_step"] == 7
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = state_tree()
+    for step in (1, 2, 3, 4):
+        mgr.save(st, step, blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    st = state_tree()
+    mgr.save(st, 5, blocking=True)
+    # a torn checkpoint without .done marker must be invisible
+    os.makedirs(tmp_path / "step_9", exist_ok=True)
+    assert mgr.latest_step() == 5
+
+
+def test_restart_is_deterministic(tmp_path):
+    """Train 12 steps straight vs fail-at-8 + restart: identical final loss
+    (checkpoint + step-indexed data resume)."""
+    cfg = reduced(get_config("qwen2-7b"))
+    mesh = make_local_mesh(1, 1)
+    parallel = ParallelConfig(param_dtype="float32", compute_dtype="float32",
+                              q_block=8, kv_block=8)
+    api = build_model(cfg, parallel, mesh)
+    data_cfg = DataConfig(seq_len=32, global_batch=2,
+                          vocab_size=cfg.vocab_size)
+
+    def make_runner(d, **kw):
+        return TrainRunner(api, Optimizer(OptConfig(lr=1e-3, warmup=2,
+                                                    decay_steps=12)),
+                           data_cfg,
+                           RunnerConfig(total_steps=12, ckpt_every=4,
+                                        ckpt_dir=str(d), **kw))
+
+    r_straight = make_runner(tmp_path / "a")
+    r_straight.run()
+    straight = [m["loss"] for m in r_straight.metrics_log]
+
+    r_fail = make_runner(tmp_path / "b", fail_at_step=8)
+    with pytest.raises(SimulatedFailure):
+        r_fail.run()
+    r_resume = make_runner(tmp_path / "b")
+    r_resume.run()
+    resumed = {m["step"]: m["loss"] for m in
+               r_fail.metrics_log + r_resume.metrics_log}
+    for i, loss in enumerate(straight):
+        assert loss == pytest.approx(resumed[i], rel=1e-5), (i, loss,
+                                                             resumed[i])
+
+
+def test_elastic_restore_with_different_sharding(tmp_path):
+    """A checkpoint restores under a different sharding spec (elastic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_local_mesh(1, 1)
+    mgr = CheckpointManager(str(tmp_path))
+    st = state_tree()
+    mgr.save(st, 1, blocking=True)
+    sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), st)
+    restored, _ = mgr.restore(st, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))

@@ -1,0 +1,137 @@
+"""Unit + property tests for the gang-lock state machine (Algorithms 1-4)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.gang import RTTask, Thread, make_virtual_gang, validate_taskset
+from repro.core.glock import GangScheduler
+
+
+def mk(name, cores, prio):
+    t = RTTask(name=name, wcet=1.0, period=10.0, cores=tuple(cores), prio=prio)
+    return t, {c: Thread(task=t, core=c, index=i)
+               for i, c in enumerate(cores)}
+
+
+def test_acquire_and_same_gang_joins():
+    s = GangScheduler(4)
+    t1, th1 = mk("t1", (0, 1), 5)
+    assert s.pick_next_task_rt(0, None, th1[0]) is th1[0]
+    assert s.g.held_flag and s.g.leader is t1
+    assert s.pick_next_task_rt(1, None, th1[1]) is th1[1]
+    assert s.g.locked_cores == 0b11
+    assert s.check_invariant()
+
+
+def test_lower_prio_blocked_even_with_idle_cores():
+    s = GangScheduler(4)
+    t1, th1 = mk("t1", (0, 1), 5)
+    t2, th2 = mk("t2", (2, 3), 3)
+    s.pick_next_task_rt(0, None, th1[0])
+    s.pick_next_task_rt(1, None, th1[1])
+    # cores 2,3 idle but t2 must NOT run (one-gang-at-a-time)
+    assert s.pick_next_task_rt(2, None, th2[2]) is None
+    assert s.pick_next_task_rt(3, None, th2[3]) is None
+    assert s.g.blocked_cores == 0b1100
+    assert s.check_invariant()
+
+
+def test_higher_prio_gang_preempts():
+    s = GangScheduler(4)
+    t1, th1 = mk("t1", (0, 1), 3)
+    t3, th3 = mk("t3", (2,), 9)
+    s.pick_next_task_rt(0, None, th1[0])
+    s.pick_next_task_rt(1, None, th1[1])
+    woken = []
+    s.reschedule_cpus = woken.extend
+    assert s.pick_next_task_rt(2, None, th3[2]) is th3[2]
+    assert s.g.leader is t3
+    assert s.g.locked_cores == 0b100
+    assert sorted(woken) == [0, 1]          # IPIs to the preempted cores
+    assert s.g.preemptions == 1
+
+
+def test_release_wakes_blocked_cores():
+    s = GangScheduler(4)
+    t1, th1 = mk("t1", (0,), 5)
+    t2, th2 = mk("t2", (1, 2), 3)
+    s.pick_next_task_rt(0, None, th1[0])
+    assert s.pick_next_task_rt(1, None, th2[1]) is None
+    assert s.pick_next_task_rt(2, None, th2[2]) is None
+    woken = []
+    s.reschedule_cpus = woken.extend
+    # t1's thread leaves the cpu with no successor -> lock free -> IPIs
+    assert s.pick_next_task_rt(0, th1[0], None) is None
+    assert not s.g.held_flag
+    assert sorted(woken) == [1, 2]
+    # now t2 can acquire
+    assert s.pick_next_task_rt(1, None, th2[1]) is th2[1]
+    assert s.g.leader is t2
+
+
+def test_virtual_gang_same_prio_coschedules():
+    s = GangScheduler(4)
+    a, tha = mk("a", (0,), 7)
+    b, thb = mk("b", (1, 2), 7)       # same prio == same (virtual) gang
+    assert s.pick_next_task_rt(0, None, tha[0]) is tha[0]
+    assert s.pick_next_task_rt(1, None, thb[1]) is thb[1]
+    assert s.pick_next_task_rt(2, None, thb[2]) is thb[2]
+    assert s.g.locked_cores == 0b111
+    assert s.check_invariant()
+
+
+def test_disabled_passthrough():
+    s = GangScheduler(4, enabled=False)
+    t1, th1 = mk("t1", (0, 1), 5)
+    t2, th2 = mk("t2", (2, 3), 3)
+    assert s.pick_next_task_rt(0, None, th1[0]) is th1[0]
+    assert s.pick_next_task_rt(2, None, th2[2]) is th2[2]  # co-scheduled
+
+
+def test_make_virtual_gang_and_validation():
+    t1 = RTTask("x", 1, 10, (0,), 1)
+    t2 = RTTask("y", 1, 10, (1,), 2)
+    gang = make_virtual_gang("g", [t1, t2], prio=5)
+    assert all(t.prio == 5 for t in gang)
+    validate_taskset(gang)
+    bad = make_virtual_gang("g", [RTTask("x", 1, 10, (0,), 1),
+                                  RTTask("y", 1, 10, (0,), 2)], prio=5)
+    try:
+        validate_taskset(bad)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),            # cpu
+                          st.integers(0, 3),            # task idx
+                          st.booleans()),               # thread departs
+                min_size=1, max_size=60))
+def test_invariant_under_random_schedules(events):
+    """One-gang-at-a-time holds under arbitrary pick sequences."""
+    tasks = [mk(f"t{i}", (0, 1, 2, 3), prio=i + 1) for i in range(4)]
+    s = GangScheduler(4)
+    running = {}
+    for cpu, ti, depart in events:
+        task, threads = tasks[ti]
+        prev = running.get(cpu)
+        nxt = threads[cpu]
+        if depart and prev is not None:
+            picked = s.pick_next_task_rt(cpu, prev, None)
+            running.pop(cpu, None)
+        else:
+            picked = s.pick_next_task_rt(cpu, prev, nxt)
+            if picked is not None:
+                running[cpu] = picked
+            else:
+                running.pop(cpu, None)
+        # sync with preemptions
+        for c in list(running):
+            if s.g.gthreads[c] is not running[c]:
+                running.pop(c)
+        assert s.check_invariant()
+        if s.g.held_flag:
+            assert s.g.leader is not None
+            assert s.g.locked_cores != 0
+        else:
+            assert s.g.locked_cores == 0

@@ -1,0 +1,110 @@
+"""Per-kernel allclose vs pure-jnp oracles, sweeping shapes/dtypes
+(interpret mode executes the kernel body on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import naive_attention
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_reference
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_reference
+from repro.kernels.moe_gmm.ops import grouped_matmul
+from repro.kernels.moe_gmm.ref import gmm_reference
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,causal,window,dtype", [
+    (2, 256, 4, 2, 64, True, 0, jnp.float32),
+    (1, 128, 8, 1, 32, True, 0, jnp.float32),
+    (2, 256, 4, 4, 64, True, 64, jnp.float32),
+    (1, 256, 2, 2, 128, False, 0, jnp.float32),
+    (1, 128, 4, 2, 64, True, 0, jnp.bfloat16),
+])
+def test_flash_attention(B, S, Hq, Hkv, D, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = naive_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 3, 16, 32, 16),
+    (1, 128, 2, 32, 16, 32),
+    (2, 32, 1, 8, 8, 8),
+    (1, 64, 4, 16, 16, 64),   # single chunk
+])
+def test_ssd_scan(B, S, H, P, N, chunk):
+    xh = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.normal(size=(B, S, H))) * 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.normal(size=(H,))) - 0.1, jnp.float32)
+    y, h = ssd_scan(xh, dt, Bm, Cm, A, chunk=chunk, interpret=True)
+    x2 = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dt2 = dt.transpose(0, 2, 1).reshape(B * H, S, 1)
+    Bm2 = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cm2 = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    A2 = jnp.broadcast_to(A[None, :], (B, H)).reshape(B * H, 1)
+    yr, hr = ssd_reference(x2, dt2, Bm2, Cm2, A2)
+    yr = yr.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    hr = hr.reshape(B, H, P, N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,C,chunk,strong_decay", [
+    (2, 64, 16, 16, False),
+    (1, 128, 32, 64, False),
+    (3, 32, 8, 32, True),
+    (1, 256, 16, 128, True),   # strong decay: matrix trick would overflow
+])
+def test_rglru_scan(B, S, C, chunk, strong_decay):
+    scale = 8.0 if strong_decay else 2.0
+    log_a = jnp.asarray(-np.abs(RNG.normal(size=(B, S, C))) * scale,
+                        jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(B, S, C)), jnp.float32)
+    y = rglru_scan(log_a, b, chunk=chunk, interpret=True)
+    yr = rglru_reference(log_a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+
+
+@pytest.mark.parametrize("E,C,D,F,dtype", [
+    (4, 32, 16, 24, jnp.float32),
+    (2, 64, 32, 32, jnp.float32),
+    (3, 16, 8, 8, jnp.bfloat16),
+])
+def test_moe_gmm(E, C, D, F, dtype):
+    x = jnp.asarray(RNG.normal(size=(E, C, D)), dtype)
+    w = jnp.asarray(RNG.normal(size=(E, D, F)), dtype)
+    counts = jnp.asarray(RNG.integers(0, C + 1, size=(E,)), jnp.int32)
+    out = grouped_matmul(x, w, counts, block_c=16, block_f=8, block_d=8,
+                         interpret=True)
+    ref = gmm_reference(x, w, counts)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_matches_model_layer_path():
+    """The Pallas kernel and the model's XLA flash path agree."""
+    from repro.models.layers import flash_attention_jnp
+    B, S, Hq, Hkv, D = 1, 128, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, D)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    G = Hq // Hkv
+    b = flash_attention_jnp(q, jnp.repeat(k, G, 2), jnp.repeat(v, G, 2),
+                            causal=True, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

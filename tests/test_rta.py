@@ -1,0 +1,77 @@
+"""Response-time analysis: exactness on the paper examples and the
+sim-vs-analysis soundness property (RTA bound >= simulated WCRT)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.gang import RTTask
+from repro.core.rta import (co_sched_wcet, response_time, schedulable,
+                            total_utilization)
+from repro.core.sim import Simulator, matrix_interference
+
+
+def test_illustrative_example_rta():
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1)
+    assert response_time(t1, [t1, t2]) == pytest.approx(2.0)
+    assert response_time(t2, [t1, t2]) == pytest.approx(6.0)
+    res = schedulable([t1, t2])
+    assert res["tau1"]["ok"] and res["tau2"]["ok"]
+    assert total_utilization([t1, t2]) == pytest.approx(0.6)
+
+
+def test_dnn_taskset_tx2_schedulable():
+    """Paper Table II (Jetson TX2): dnn(4) + bww under RT-Gang."""
+    dnn = RTTask("dnn", wcet=7.6, period=17, cores=(0, 1, 2, 3), prio=2)
+    bww = RTTask("bww", wcet=40.0, period=100, cores=(0, 1, 2, 3), prio=1)
+    res = schedulable([dnn, bww])
+    assert res["dnn"]["ok"]
+    # bww WCRT = 40 + interference from dnn releases
+    assert res["bww"]["wcrt"] > 40.0
+    assert res["bww"]["ok"]
+
+
+def test_cosched_wcet_blowup():
+    """The 10x co-scheduling WCET makes the set unschedulable, while RT-Gang
+    keeps solo WCETs (the paper's core argument)."""
+    intf = matrix_interference({("tau1", "tau2"): 10.0})
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1)
+    assert co_sched_wcet(t1, [t1, t2], intf) == pytest.approx(20.0)
+    pess = RTTask("tau1p", wcet=20.0, period=10, cores=(0, 1), prio=2)
+    assert not schedulable([pess, t2])["tau1p"]["ok"]
+
+
+def test_blocking_term():
+    """Non-preemptible lower-prio quanta add B_i (TPU-executor adaptation)."""
+    t1 = RTTask("hi", wcet=2, period=10, cores=(0,), prio=2)
+    t2 = RTTask("lo", wcet=4, period=20, cores=(0,), prio=1)
+    r0 = response_time(t1, [t1, t2], blocking=0.0)
+    r1 = response_time(t1, [t1, t2], blocking=1.5)
+    assert r1 == pytest.approx(r0 + 1.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(1, 4),      # wcet
+              st.integers(2, 6)),     # period multiplier
+    min_size=1, max_size=3))
+def test_rta_bounds_simulated_wcrt(spec):
+    """Soundness: if RTA declares the set schedulable, the simulator observes
+    response times <= the RTA bound (one-gang-at-a-time transform)."""
+    tasks = []
+    for i, (c, pm) in enumerate(spec):
+        period = c * pm * 2
+        tasks.append(RTTask(f"t{i}", wcet=float(c), period=float(period),
+                            cores=(i % 4,), prio=100 - i))
+    res = schedulable(tasks)
+    if not all(v["ok"] for v in res.values()):
+        return
+    horizon = 4 * max(t.period for t in tasks)
+    sim = Simulator(4, tasks, rt_gang_enabled=True, dt=0.25)
+    r = sim.run(horizon)
+    for t in tasks:
+        if r.response_times[t.name]:
+            assert max(r.response_times[t.name]) <= \
+                res[t.name]["wcrt"] + 0.5 + 1e-6, \
+                (t.name, r.response_times[t.name], res[t.name])

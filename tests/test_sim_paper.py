@@ -1,0 +1,123 @@
+"""The simulator must reproduce the paper's §III-E illustrative example and
+the Fig.2/Fig.3 scheduling behaviors exactly."""
+import pytest
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import Simulator, matrix_interference
+
+
+def taskset():
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2,
+                mem_budget=1e9)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1,
+                mem_budget=1e9)
+    return t1, t2
+
+
+def run(enabled, interference=None, be=()):
+    t1, t2 = taskset()
+    sim = Simulator(4, [t1, t2], be_tasks=list(be),
+                    interference=interference or (lambda v, a: 1.0),
+                    rt_gang_enabled=enabled, dt=0.05)
+    return sim.run(10.0)
+
+
+def test_cosched_no_interference_fig4a():
+    r = run(False, be=[BETask("tau3", cores=(0, 1, 2, 3))])
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(4.0)]
+    assert r.slack_time == pytest.approx(28.0)
+
+
+def test_rtgang_fig4b():
+    r = run(True, be=[BETask("tau3", cores=(0, 1, 2, 3))])
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(6.0)]   # blocked 0..2
+    assert r.slack_time == pytest.approx(28.0)
+
+
+def test_cosched_with_interference_fig4c():
+    intf = matrix_interference({("tau1", "tau2"): 10.0})
+    r = run(False, interference=intf, be=[BETask("tau3", cores=(0, 1, 2, 3))])
+    assert r.response_times["tau1"] == [pytest.approx(5.6, abs=1e-6)]
+    assert r.response_times["tau2"] == [pytest.approx(4.0)]
+    assert r.slack_time == pytest.approx(20.8)
+
+
+def test_rtgang_immune_to_interference():
+    """Paper: 'regardless of task and hardware characteristics, real-time
+    tasks' execution times would remain the same'."""
+    intf = matrix_interference({("tau1", "tau2"): 10.0,
+                                ("tau2", "tau1"): 100.0})
+    r = run(True, interference=intf)
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(6.0)]
+
+
+def test_fig2_single_thread_idles_all_other_cores():
+    """Fig.2: when single-threaded t3 (highest prio) runs, every other core
+    must be idle even though t1/t2 threads are ready."""
+    t1 = RTTask("t1", wcet=4, period=100, cores=(0, 1, 2, 3), prio=1)
+    t2 = RTTask("t2", wcet=2, period=100, cores=(0, 1, 2), prio=2,
+                release_offset=1.0)
+    t3 = RTTask("t3", wcet=1, period=100, cores=(2,), prio=3,
+                release_offset=2.0)
+    sim = Simulator(4, [t1, t2, t3], dt=0.05)
+    r = sim.run(20.0)
+    r.trace.finish_view()
+    # while t3 runs (2..3), no other RT task may run on any core
+    for seg in r.trace.segments:
+        if seg.label in ("t1", "t2"):
+            assert not (seg.t0 < 3.0 - 1e-9 and seg.t1 > 2.0 + 1e-9), \
+                f"{seg.label} overlaps t3 on core {seg.core}: " \
+                f"[{seg.t0},{seg.t1}]"
+    assert r.response_times["t3"] == [pytest.approx(1.0)]
+
+
+def test_fig3_virtual_gang_blocks_then_preempted():
+    """Fig.3: virtual gang tg = {t1,t2,t3} at one prio. (a) lower-prio t4
+    waits for tg's last thread; (b) higher-prio t4 preempts tg."""
+    def vgang():
+        return [RTTask("g1", wcet=3, period=100, cores=(0,), prio=5),
+                RTTask("g2", wcet=2, period=100, cores=(1,), prio=5),
+                RTTask("g3", wcet=1, period=100, cores=(2, 3), prio=5)]
+
+    # (a) t4 lower prio: starts only after the longest member (3ms) finishes
+    t4 = RTTask("t4", wcet=1, period=100, cores=(1,), prio=4,
+                release_offset=1.0)
+    sim = Simulator(4, vgang() + [t4], dt=0.05)
+    r = sim.run(20.0)
+    assert r.response_times["t4"] == [pytest.approx(3.0)]  # 1.0 -> 4.0
+
+    # (b) t4 higher prio: preempts all members immediately
+    t4h = RTTask("t4", wcet=1, period=100, cores=(1,), prio=9,
+                 release_offset=1.0)
+    sim = Simulator(4, vgang() + [t4h], dt=0.05)
+    r = sim.run(20.0)
+    assert r.response_times["t4"] == [pytest.approx(1.0)]
+    # g1 was preempted for 1ms -> finishes at 3+1 = 4
+    assert r.response_times["g1"] == [pytest.approx(4.0)]
+
+
+def test_throttling_bounds_be_progress():
+    """BE memory task runs only within the gang's budget per interval."""
+    t1 = RTTask("rt", wcet=5, period=10, cores=(0, 1), prio=5,
+                mem_budget=0.2)                     # 0.2 units per 1ms window
+    bem = BETask("be_mem", cores=(2, 3), mem_rate=1.0)  # wants 1 unit/ms
+    sim = Simulator(4, [t1], be_tasks=[bem], dt=0.05,
+                    throttle_mode="reactive")
+    r = sim.run(10.0)
+    # while the gang runs (0..5ms), be_mem gets ~0.2ms of each 1ms window
+    # per core; off-gang windows are unthrottled.
+    assert r.throttle_events > 0
+    assert r.be_progress["be_mem"] < 2 * 5 * 0.35 + 2 * 5 * 1.0 + 1.0
+
+
+def test_wcrt_over_many_periods_deterministic():
+    t1, t2 = taskset()
+    sim = Simulator(4, [t1, t2], rt_gang_enabled=True, dt=0.05)
+    r = sim.run(100.0)
+    assert len(r.response_times["tau1"]) == 10
+    assert max(r.response_times["tau1"]) == pytest.approx(2.0)
+    assert max(r.response_times["tau2"]) == pytest.approx(6.0)
+    assert r.deadline_misses["tau1"] == 0 and r.deadline_misses["tau2"] == 0

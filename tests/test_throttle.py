@@ -1,0 +1,67 @@
+"""Bandwidth-regulator invariants (hypothesis property tests)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.throttle import BandwidthRegulator
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.5, 10.0),
+       st.lists(st.tuples(st.floats(0.0, 3.0), st.floats(0.01, 0.5)),
+                min_size=1, max_size=50))
+def test_admission_never_exceeds_budget(budget, charges):
+    """admission mode: accepted traffic per window <= budget, always."""
+    reg = BandwidthRegulator(1, interval=1.0, mode="admission")
+    reg.set_gang_budget(budget)
+    now = 0.0
+    window_used = {}
+    for amount, dt in charges:
+        ok = reg.charge(0, amount, now)
+        w = int(now)  # interval = 1.0
+        if ok:
+            window_used[w] = window_used.get(w, 0.0) + amount
+        now += dt
+    for w, used in window_used.items():
+        assert used <= budget + 1e-9, (w, used, budget)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.5, 10.0),
+       st.lists(st.tuples(st.floats(0.0, 3.0), st.floats(0.01, 0.5)),
+                min_size=1, max_size=50))
+def test_reactive_overshoot_at_most_one_quantum(budget, charges):
+    """reactive mode (paper-faithful): overshoot bounded by one quantum."""
+    reg = BandwidthRegulator(1, interval=1.0, mode="reactive")
+    reg.set_gang_budget(budget)
+    now = 0.0
+    window_used = {}
+    max_q = 0.0
+    for amount, dt in charges:
+        if not reg.is_stalled(0, now):
+            ok = reg.charge(0, amount, now)
+            w = int(now)
+            window_used[w] = window_used.get(w, 0.0) + amount
+            max_q = max(max_q, amount)
+        now += dt
+    for w, used in window_used.items():
+        assert used <= budget + max_q + 1e-9
+
+
+def test_stall_clears_next_interval():
+    reg = BandwidthRegulator(1, interval=1.0, mode="reactive")
+    reg.set_gang_budget(1.0)
+    assert reg.charge(0, 2.0, 0.1) is False         # overshoot -> stall
+    assert reg.is_stalled(0, 0.5)
+    assert not reg.is_stalled(0, 1.05)              # next window
+    assert reg.charge(0, 0.5, 1.1) is True
+
+
+def test_budget_follows_gang():
+    """Budget switches with gang-lock ownership (paper §IV-F)."""
+    reg = BandwidthRegulator(2, interval=1.0, mode="admission")
+    reg.set_gang_budget(5.0)
+    assert reg.charge(0, 4.0, 0.0)
+    reg.set_gang_budget(0.0)        # max-isolation gang arrives
+    assert reg.charge(1, 0.1, 0.1) is False
+    reg.set_gang_budget(None)       # no gang -> unthrottled
+    assert reg.charge(1, 100.0, 0.2)
