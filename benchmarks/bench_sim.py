@@ -1,0 +1,113 @@
+"""Simulator-engine benchmark: event-driven (dt=None) vs fixed-quantum.
+
+Runs Fig.5-style synthetic tasksets over growing horizons, records wall
+time, events/sec and the speedup of the exact engine over the quantum
+engine, and writes the table to BENCH_sim.json at the repo root. The
+quantum engine is O(horizon/dt x cores x jobs) — quadratic in horizon
+because of its completed-job rescan — so its long-horizon cells are the
+expensive part of a full run.
+
+    PYTHONPATH=src python benchmarks/bench_sim.py [--smoke] [--out PATH]
+
+--smoke caps the horizon at 1,000 ms (CI perf sanity: asserts the event
+engine wins by >= 5x there; the full run's >= 10x criterion applies to
+the 10,000 ms cell).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import Simulator, matrix_interference
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fig5_style_taskset():
+    """benchmarks/fig5_synthetic.py's taskset (restated: fresh task uids
+    per call keep Simulator instances independent)."""
+    t1 = RTTask("tau1", wcet=3.5, period=20, cores=(0, 1), prio=2,
+                mem_budget=0.1)
+    t2 = RTTask("tau2", wcet=6.5, period=30, cores=(2, 3), prio=1,
+                mem_budget=0.1)
+    bem = BETask("be_mem", cores=(0, 1, 2, 3), mem_rate=1.0)
+    bec = BETask("be_cpu", cores=(0, 1, 2, 3), mem_rate=0.01)
+    intf = matrix_interference({
+        ("tau1", "tau2"): 2.0, ("tau2", "tau1"): 2.0,
+        ("tau1", "be_mem"): 1.5, ("tau2", "be_mem"): 1.5,
+    })
+    return [t1, t2], [bem, bec], intf
+
+
+def run_engine(dt, horizon: float):
+    rts, bes, intf = fig5_style_taskset()
+    sim = Simulator(4, rts, be_tasks=bes, interference=intf,
+                    rt_gang_enabled=True, dt=dt, throttle_mode="reactive")
+    t0 = time.perf_counter()
+    r = sim.run(horizon)
+    wall = time.perf_counter() - t0
+    return r, wall
+
+
+def bench_horizon(horizon: float, dt: float = 0.05) -> dict:
+    e, e_wall = run_engine(None, horizon)
+    q, q_wall = run_engine(dt, horizon)
+    jobs = sum(len(v) for v in e.response_times.values())
+    row = {
+        "horizon_ms": horizon,
+        "quantum_dt_ms": dt,
+        "quantum_wall_s": round(q_wall, 4),
+        "event_wall_s": round(e_wall, 4),
+        "speedup": round(q_wall / e_wall, 2) if e_wall > 0 else None,
+        "events": e.events,
+        "events_per_sec": round(e.events / e_wall) if e_wall > 0 else None,
+        "quantum_steps": int(round(horizon / dt)),
+        "jobs_completed": jobs,
+        "wcrt_quantum": {k: max(v) for k, v in q.response_times.items()},
+        "wcrt_event": {k: max(v) for k, v in e.response_times.items()},
+        "wcrt_max_gap_ms": round(max(
+            abs(max(q.response_times[k]) - max(e.response_times[k]))
+            for k in e.response_times), 5),
+        "misses_equal": q.deadline_misses == e.deadline_misses,
+    }
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizons only; assert >=5x at 1,000 ms")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_sim.json"))
+    args = ap.parse_args()
+
+    horizons = [120.0, 1000.0] if args.smoke \
+        else [120.0, 1000.0, 10000.0]
+    rows = []
+    for h in horizons:
+        row = bench_horizon(h)
+        rows.append(row)
+        print(json.dumps(row))
+
+    out = {
+        "bench": "sim_engines",
+        "taskset": "fig5_synthetic (2 RT gangs + 2 BE, reactive throttle)",
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+    last = rows[-1]
+    target = 5.0 if args.smoke else 10.0
+    assert last["misses_equal"], "engines disagree on deadline misses"
+    assert last["speedup"] >= target, \
+        f"speedup {last['speedup']}x below {target}x at {last['horizon_ms']}ms"
+    print(f"OK: {last['speedup']}x at {last['horizon_ms']}ms "
+          f"({last['events_per_sec']} events/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,11 @@ def main() -> None:
     for r in table3_overhead.run():
         print(r)
 
+    print("== sim engines (event-driven vs fixed-quantum, smoke) ==")
+    from benchmarks import bench_sim
+    for h in (120.0, 1000.0):
+        print(bench_sim.bench_horizon(h))
+
     print("== roofline (per arch x shape x mesh; dry-run cache) ==")
     rows = roofline_bench.run()
     for r in rows:

@@ -1,7 +1,7 @@
 """Validate hlo_analysis against hand-computable cases."""
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
-from repro.roofline.hlo_analysis import analyze
+from repro.roofline.hlo_analysis import analyze, xla_cost_analysis
 
 # case 1: single matmul
 m, k, n = 128, 256, 512
@@ -25,7 +25,7 @@ c2 = jax.jit(scanned).lower(
 r2 = analyze(c2.as_text())
 exp2 = L * 2 * m * m * m
 print("scan flops", r2["flops"], "expected", exp2, "ok", r2["flops"] == exp2)
-print("xla cost_analysis flops:", c2.cost_analysis().get("flops"))
+print("xla cost_analysis flops:", xla_cost_analysis(c2).get("flops"))
 
 # case 3: collective bytes under shard_map (needs >1 device? skip if 1)
 print("bytes case1:", r["bytes"], ">=", (m*k + k*n + m*n) * 4)

@@ -2,7 +2,8 @@
 
 * gang.py     — task model (RT gangs, virtual gangs, best-effort tasks)
 * glock.py    — Algorithms 1-4 state machine (one-gang-at-a-time invariant)
-* sim.py      — discrete-event scheduler simulator (reproduces Fig.4/5)
+* sim.py      — fixed-quantum scheduler simulator (reproduces Fig.4/5)
+* events.py   — exact event-driven engine (Simulator dt=None; O(events))
 * throttle.py — BWLOCK-adapted bandwidth regulation (reactive + admission)
 * rta.py      — classical response-time analysis enabled by the transform
 * executor.py — gang-scheduled executor for real JAX workloads (TPU lanes)
@@ -12,13 +13,14 @@ from repro.core.gang import BETask, RTTask, Thread, make_virtual_gang
 from repro.core.glock import GangScheduler, GLock
 from repro.core.sim import (Simulator, SimResult, matrix_interference,
                             no_interference)
+from repro.core.events import EventEngine
 from repro.core.throttle import BandwidthRegulator
 from repro.core.rta import response_time, schedulable, total_utilization
 from repro.core.executor import BEJob, GangExecutor, RTJob
 from repro.core.tracing import Trace
 
 __all__ = ["BETask", "RTTask", "Thread", "make_virtual_gang",
-           "GangScheduler", "GLock", "Simulator", "SimResult",
+           "GangScheduler", "GLock", "Simulator", "SimResult", "EventEngine",
            "matrix_interference", "no_interference", "BandwidthRegulator",
            "response_time", "schedulable", "total_utilization",
            "BEJob", "GangExecutor", "RTJob", "Trace"]

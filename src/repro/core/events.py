@@ -1,0 +1,373 @@
+"""Exact, event-driven scheduling engine — the dt -> 0 limit of the
+fixed-quantum simulator in sim.py, at O(events) instead of
+O(horizon/dt x cores x jobs) cost.
+
+Design (DESIGN.md §8):
+
+* **Heap event queue.** A single heapq holds job releases, thread
+  completions, throttle trips (budget exhaustion) and throttle replenish /
+  un-stall wakeups. Gang hand-offs (lock release -> blocked cores wake,
+  gang preemption IPIs) are zero-delay events: the GangScheduler's
+  ``reschedule_cpus`` callback feeds the dirty-core set that the same-
+  timestamp scheduling fixed point drains, and ``on_gang_change`` counts
+  them.
+* **Closed-form advancement.** Between two consecutive events the set of
+  co-runners — and therefore every thread's interference-adjusted rate —
+  is constant, so remaining work decreases linearly and completion times
+  are solved exactly (``t = now + remaining * slowdown``) instead of being
+  discovered by dt-stepping.
+* **Active-job pointers.** Each task keeps a deque of released-but-
+  unfinished jobs; the head is the active job (O(1)), replacing the
+  quantum loop's linear rescan of every completed job.
+* **Priority-indexed ready queues.** Each core keeps a lazy max-heap of
+  (−prio, submission-order, task-uid) entries pushed on job activation;
+  stale entries (no pending work on that core) are popped on peek. This
+  replaces the per-core O(tasks) scan.
+
+Semantic parity with the quantum engine (asserted by tests/test_events.py
+on the paper's Fig.4 and Fig.5 tasksets): identical GangScheduler state
+machine, identical interference model, and the continuous-time limit of
+the reactive bandwidth regulator (a best-effort core stalls the instant
+its window budget is exhausted — the quantum engine overshoots by at most
+one accounting quantum, which is exactly its O(dt) discretization bias).
+Best-effort candidates sharing a core are modeled as fair fractional
+co-runners (each gets 1/n of the core and generates 1/n of its traffic),
+the dt -> 0 limit of the quantum loop's per-step round-robin.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.gang import RTTask, Thread
+
+_EPS_T = 1e-9       # time comparison tolerance (ms)
+_EPS_W = 1e-9       # work comparison tolerance (ms of compute)
+_INF = float("inf")
+
+# event kinds (heap tiebreak after time+seq; values are cosmetic)
+_RELEASE, _COMPLETE, _EXHAUST, _UNSTALL = range(4)
+
+
+class _TaskState:
+    """Per-task release bookkeeping + the active-job pointer."""
+    __slots__ = ("task", "queue", "released")
+
+    def __init__(self, task: RTTask):
+        self.task = task
+        self.queue: deque = deque()      # released, unfinished jobs (FIFO)
+        self.released = 0
+
+    @property
+    def active(self):
+        return self.queue[0] if self.queue else None
+
+
+class EventEngine:
+    """Drives a Simulator's GangScheduler/BandwidthRegulator/Trace to an
+    exact SimResult. Constructed by ``Simulator.run`` when ``dt is None``."""
+
+    def __init__(self, sim):
+        self.sim = sim
+        self.events_processed = 0
+        self.handoffs = 0
+
+    # -----------------------------------------------------------------
+    def run(self, horizon: float):
+        from repro.core.sim import Job, SimResult
+
+        sim = self.sim
+        n = sim.n_cores
+        sched, reg, trace = sim.sched, sim.reg, sim.trace
+        interference = sim.interference
+        tasks = list(sim.rt_tasks)
+        order = {t.uid: i for i, t in enumerate(tasks)}
+        threads: Dict[Tuple[int, int], Thread] = {
+            (t.uid, c): Thread(task=t, core=c, index=i)
+            for t in tasks for i, c in enumerate(t.cores)}
+        tstate = {t.uid: _TaskState(t) for t in tasks}
+
+        response: Dict[str, List[float]] = {t.name: [] for t in tasks}
+        misses = {t.name: 0 for t in tasks}
+        be_progress = {b.name: 0.0 for b in sim.be_tasks}
+        slack = 0.0
+
+        current: List[Optional[Thread]] = [None] * n
+        slow = [1.0] * n                     # interference slowdown per core
+        rt_sig: List[Optional[tuple]] = [None] * n
+        be_cands: List[tuple] = [tuple(b for b in sim.be_tasks
+                                       if c in b.cores) for c in range(n)]
+        be_active: List[tuple] = [()] * n    # unstalled co-running BE tasks
+        be_rate = [0.0] * n                  # aggregate traffic rate
+        be_sig: List[Optional[tuple]] = [None] * n
+        be_epoch = [0] * n
+        stall_label: List[Optional[str]] = [None] * n
+
+        ready: List[list] = [[] for _ in range(n)]
+        heap: list = []
+        seq = itertools.count()
+
+        def push(t: float, kind: int, data) -> None:
+            heapq.heappush(heap, (t, next(seq), kind, data))
+
+        dirty = set()
+
+        def _resched(cores):                 # gang hand-off / preemption IPI
+            dirty.update(cores)
+        sched.reschedule_cpus = _resched
+
+        def _gang_change(event, leader):
+            self.handoffs += 1
+        sched.on_gang_change = _gang_change
+
+        # ---- releases / activation ----------------------------------
+        def activate(job) -> None:
+            for c in job.task.cores:
+                if job.remaining[c] > _EPS_W:
+                    heapq.heappush(ready[c],
+                                   (-job.task.prio, order[job.task.uid],
+                                    job.task.uid))
+                    dirty.add(c)
+
+        def do_release(uid: int) -> None:
+            ts = tstate[uid]
+            t = ts.task
+            rel = t.release_time(ts.released)
+            if rel is None:
+                return
+            job = Job(task=t, release=rel, index=ts.released,
+                      remaining={c: t.thread_wcet(c) for c in t.cores})
+            ts.released += 1
+            ts.queue.append(job)
+            if len(ts.queue) == 1:
+                activate(job)
+            nxt = t.release_time(ts.released)
+            if nxt is not None and nxt < horizon:
+                push(nxt, _RELEASE, uid)
+
+        for t in tasks:
+            first = t.release_time(0)
+            if first is not None and first < horizon:
+                push(first, _RELEASE, t.uid)
+
+        # ---- ready queue (lazy max-heap peek) -----------------------
+        def ready_thread(c: int) -> Optional[Thread]:
+            h = ready[c]
+            while h:
+                _, _, uid = h[0]
+                j = tstate[uid].active
+                if j is None or j.remaining.get(c, 0.0) <= _EPS_W:
+                    heapq.heappop(h)
+                    continue
+                return threads[(uid, c)]
+            return None
+
+        # ---- scheduling fixed point (mirrors sim.py's pass loop) ----
+        def fixed_point() -> None:
+            for _ in range(4 + len(tasks)):
+                if not dirty:
+                    break
+                todo = sorted(dirty)
+                dirty.clear()
+                for c in todo:
+                    prev = current[c]
+                    nxt = ready_thread(c)
+                    current[c] = sched.pick_next_task_rt(c, prev, nxt)
+            if sched.enabled:
+                g = sched.g
+                for c in range(n):
+                    if current[c] is not None and \
+                            g.gthreads[c] is not current[c]:
+                        current[c] = g.gthreads[c]
+
+        # ---- best-effort filling + interference rates ---------------
+        def refill(now: float) -> None:
+            for c in range(n):
+                if current[c] is None and be_cands[c] and \
+                        not reg.is_stalled(c, now):
+                    cands = be_cands[c]
+                    be_active[c] = cands
+                    be_rate[c] = sum(b.mem_rate for b in cands) / len(cands)
+                else:
+                    be_active[c] = ()
+                    be_rate[c] = 0.0
+
+        def recompute_rates() -> None:
+            for c in range(n):
+                th = current[c]
+                if th is None:
+                    continue
+                victim = th.task.name
+                s = 1.0
+                for cc in range(n):
+                    if cc == c:
+                        continue
+                    other = current[cc]
+                    if other is not None:
+                        if other.task.name != victim:
+                            f = interference(victim, other.task.name)
+                            if f > s:
+                                s = f
+                    else:
+                        for b in be_active[cc]:
+                            if b.name != victim:
+                                f = interference(victim, b.name)
+                                if f > s:
+                                    s = f
+                slow[c] = s
+
+        def push_updates(now: float) -> None:
+            for c in range(n):
+                th = current[c]
+                if th is not None:
+                    j = tstate[th.task.uid].active
+                    if j is None:        # drained; reschedule at next event
+                        dirty.add(c)
+                        rt_sig[c] = None
+                        be_sig[c] = None
+                        continue
+                    sig = (th.task.uid, j.index, slow[c])
+                    if rt_sig[c] != sig:
+                        rt_sig[c] = sig
+                        push(now + j.remaining[c] * slow[c], _COMPLETE, c)
+                    be_sig[c] = None
+                    continue
+                rt_sig[c] = None
+                st = reg.cores[c]
+                if st.stalled_until > now + _EPS_T:
+                    sig = ("stalled", st.stalled_until)
+                    if be_sig[c] != sig:
+                        be_sig[c] = sig
+                        be_epoch[c] += 1
+                        push(st.stalled_until, _UNSTALL, c)
+                elif be_active[c] and be_rate[c] > 0.0 and \
+                        st.budget != _INF:
+                    trip = reg.next_trip_time(c, be_rate[c], now)
+                    sig = ("running", be_active[c], be_rate[c], st.budget,
+                           trip)
+                    if be_sig[c] != sig:
+                        be_sig[c] = sig
+                        be_epoch[c] += 1
+                        if trip < horizon + _EPS_T and trip != _INF:
+                            push(trip, _EXHAUST, (c, be_epoch[c]))
+                else:
+                    sig = ("free", be_active[c])
+                    if be_sig[c] != sig:
+                        be_sig[c] = sig
+                        be_epoch[c] += 1
+
+        # ---- closed-form interval advancement -----------------------
+        def advance(t0: float, t1: float) -> None:
+            nonlocal slack
+            if t1 - t0 < 1e-12:
+                return
+            span = t1 - t0
+            for c in range(n):
+                th = current[c]
+                if th is not None:
+                    j = tstate[th.task.uid].active
+                    if j is None:        # drained; idle until rescheduled
+                        trace.record(c, None, t0, t1)
+                        slack += span
+                        continue
+                    if j.start is None:
+                        j.start = t0
+                    j.remaining[c] = max(0.0,
+                                         j.remaining[c] - span / slow[c])
+                    trace.record(c, th.task.name, t0, t1)
+                    continue
+                slack += span
+                if be_active[c]:
+                    k = len(be_active[c])
+                    sub = span / k
+                    for i, b in enumerate(be_active[c]):
+                        be_progress[b.name] += sub
+                        trace.record(c, b.name, t0 + i * sub,
+                                     t0 + (i + 1) * sub)
+                    if be_rate[c] > 0.0:
+                        reg.charge_span(c, be_rate[c], t0, t1)
+                elif be_cands[c] and reg.is_stalled(c, t0):
+                    trace.record(c, stall_label[c] or
+                                 "throttled:" + be_cands[c][0].name, t0, t1)
+                else:
+                    trace.record(c, None, t0, t1)
+
+        def detect_completions(now: float) -> None:
+            for c in range(n):
+                th = current[c]
+                if th is None:
+                    continue
+                ts = tstate[th.task.uid]
+                j = ts.active
+                if j is None:
+                    # a sibling core's iteration popped the finished job
+                    # and the queue drained — this core must reschedule
+                    dirty.add(c)
+                    continue
+                r = j.remaining.get(c)
+                if r is None or r > _EPS_W:
+                    continue
+                j.remaining[c] = 0.0
+                dirty.add(c)
+                if j.done and j.finish is None:
+                    j.finish = now
+                    rt = now - j.release
+                    response[th.task.name].append(rt)
+                    if rt > th.task.deadline + 1e-9:
+                        misses[th.task.name] += 1
+                    ts.queue.popleft()
+                    if ts.queue:
+                        activate(ts.queue[0])
+
+        # ---- main loop ----------------------------------------------
+        now = 0.0
+        fixed_point()
+        refill(now)
+        recompute_rates()
+        push_updates(now)
+        while True:
+            t_next = min(heap[0][0], horizon) if heap else horizon
+            advance(now, t_next)
+            now = t_next
+            detect_completions(now)
+            while heap and heap[0][0] <= now + _EPS_T:
+                _, _, kind, data = heapq.heappop(heap)
+                self.events_processed += 1
+                if now >= horizon - _EPS_T and kind == _RELEASE:
+                    continue             # quantum engine never releases at T
+                if kind == _RELEASE:
+                    do_release(data)
+                elif kind == _EXHAUST:
+                    c, epoch = data
+                    st = reg.cores[c]
+                    if epoch == be_epoch[c] and be_rate[c] > 0.0 and \
+                            st.budget != _INF and \
+                            st.used >= st.budget - 1e-6:
+                        reg.trip(c, now)
+                        heavy = max(be_active[c] or be_cands[c],
+                                    key=lambda b: b.mem_rate)
+                        stall_label[c] = "throttled:" + heavy.name
+                # _COMPLETE / _UNSTALL: pure wakeups — the state refresh
+                # below observes the zero remaining / lifted stall.
+            if now >= horizon - _EPS_T:
+                break
+            fixed_point()
+            if sched.enabled and sched.g.held_flag and \
+                    sched.g.leader is not None:
+                reg.set_gang_budget(sched.g.leader.mem_budget)
+            else:
+                reg.set_gang_budget(None)
+            refill(now)
+            recompute_rates()
+            push_updates(now)
+
+        throttle_events = sum(st.throttle_events
+                              for st in reg.cores.values())
+        return SimResult(
+            trace=trace, response_times=response, deadline_misses=misses,
+            be_progress=be_progress, throttle_events=throttle_events,
+            ipis=sched.g.ipis_sent, preemptions=sched.g.preemptions,
+            slack_time=slack, horizon=horizon,
+            events=self.events_processed, engine="event")

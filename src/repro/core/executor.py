@@ -74,6 +74,11 @@ class GangExecutor:
         self.n_lanes = n_lanes
         self.enabled = enabled
         self.sched = GangScheduler(n_lanes, enabled=enabled)
+        # wake blocked lanes promptly on gang hand-off (lock released or
+        # preempted) instead of having them poll. Lock order: glock.g.lock
+        # is only ever taken *outside* self._lock, so notifying under
+        # self._lock from inside the glock callback cannot deadlock.
+        self.sched.on_gang_change = self._on_gang_change
         self.reg = BandwidthRegulator(n_lanes,
                                       interval=regulation_interval_s,
                                       mode="admission")
@@ -119,6 +124,28 @@ class GangExecutor:
         self.be_quanta.setdefault(job.name, 0)
 
     # ------------------------------------------------------------------
+    def _on_gang_change(self, event: str, leader) -> None:
+        if event in ("release", "preempt"):
+            with self._wake:
+                self._wake.notify_all()
+
+    def _next_release_in(self, now: float) -> Optional[float]:
+        """Seconds until the earliest future RT release (None = no more)."""
+        best: Optional[float] = None
+        for job in self.rt_jobs:
+            insts = self._instances[job.uid]
+            n = len(insts)
+            if job.n_jobs is not None and n >= job.n_jobs:
+                continue
+            if n == 0:
+                return 0.0
+            if job.period_s is None:
+                continue
+            delta = insts[-1].release + job.period_s - now
+            if best is None or delta < best:
+                best = delta
+        return best
+
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
@@ -178,23 +205,29 @@ class GangExecutor:
                 if inst is None:
                     prev = picked
                     continue
-                # gang-isolation barrier: wait out other gangs' quanta
-                while True:
-                    with self._lock:
+                # gang-isolation barrier: wait out other gangs' in-flight
+                # quanta. Condition-variable wakeups (notified when any
+                # quantum retires and on gang hand-offs) replace the old
+                # sleep-poll so idle lanes don't burn CPU while they wait.
+                with self._wake:
+                    while True:
+                        if self._stop:
+                            return
                         others = [p for ln, p in self._inflight.items()
                                   if ln != lane and p != job.prio]
                         if not others:
                             self._inflight[lane] = job.prio
                             break
-                    time.sleep(0.0002)
+                        self._wake.wait(timeout=0.05)
                 t0 = self._now()
                 if inst.start is None:
                     inst.start = t0
                 try:
                     job.fn(lane, inst.index)
                 finally:
-                    with self._lock:
+                    with self._wake:
                         self._inflight.pop(lane, None)
+                        self._wake.notify_all()
                 t1 = self._now()
                 self.trace.record(lane, job.name, t0 * 1e3, t1 * 1e3)
                 dur = t1 - t0
@@ -228,7 +261,16 @@ class GangExecutor:
                     ran_be = True
                     break
             if not ran_be:
-                time.sleep(0.0005)
+                # idle lane: sleep on the condition variable until the next
+                # RT release is due, a quantum retires, or a gang hand-off
+                # frees work — not a fixed-period poll.
+                with self._wake:
+                    if self._stop:
+                        return
+                    delta = self._next_release_in(self._now())
+                    timeout = 0.05 if delta is None else \
+                        min(max(delta, 0.0002), 0.05)
+                    self._wake.wait(timeout=timeout)
 
     # ------------------------------------------------------------------
     def run(self, duration_s: float):
@@ -239,8 +281,9 @@ class GangExecutor:
         for w in workers:
             w.start()
         time.sleep(duration_s)
-        with self._lock:
+        with self._wake:
             self._stop = True
+            self._wake.notify_all()
         for w in workers:
             w.join(timeout=5.0)
         self.trace.finish_view()

@@ -58,6 +58,17 @@ class RTTask:
             return self.wcet_per_core.get(core, self.wcet)
         return self.wcet
 
+    def release_time(self, k: int) -> Optional[float]:
+        """Absolute release time of job ``k`` (None once past n_jobs)."""
+        if self.n_jobs is not None and k >= self.n_jobs:
+            return None
+        return self.release_offset + k * self.period
+
+    @property
+    def deadline(self) -> float:
+        """Implicit deadlines: deadline = period (paper §III)."""
+        return self.period
+
     @property
     def n_threads(self) -> int:
         return len(self.cores)

@@ -65,6 +65,12 @@ class GangScheduler:
         self.g = GLock(n_cores=n_cores)
         self.reschedule_cpus = reschedule_cpus or (lambda cores: None)
         self.enabled = enabled   # paper: runtime toggle via sched_features
+        # gang hand-off hook: called with ("acquire"|"release"|"preempt",
+        # leader RTTask or None) whenever lock ownership changes. The
+        # event-driven engine counts hand-offs through it; the executor
+        # wakes barrier waiters on "release".
+        self.on_gang_change: Optional[
+            Callable[[str, Optional[RTTask]], None]] = None
 
     # ---- Algorithm 2: acquire -----------------------------------------------
     def acquire_gang_lock(self, cpu: int, thread: Thread) -> None:
@@ -74,6 +80,8 @@ class GangScheduler:
         g.leader = thread.task
         g.gthreads[cpu] = thread
         g.acquisitions += 1
+        if self.on_gang_change is not None:
+            self.on_gang_change("acquire", g.leader)
 
     # ---- Algorithm 3: try release -------------------------------------------
     def try_glock_release(self, prev: Optional[Thread]) -> None:
@@ -92,6 +100,8 @@ class GangScheduler:
                 g.ipis_sent += len(blocked)
                 self.reschedule_cpus(blocked)
             g.blocked_cores = 0
+            if self.on_gang_change is not None:
+                self.on_gang_change("release", None)
 
     # ---- Algorithm 4: gang preemption ----------------------------------------
     def do_gang_preemption(self) -> List[int]:
@@ -104,6 +114,8 @@ class GangScheduler:
         g.locked_cores = 0
         for cpu in victims:
             g.gthreads[cpu] = None
+        if victims and self.on_gang_change is not None:
+            self.on_gang_change("preempt", g.leader)
         return victims
 
     # ---- Algorithm 1: pick_next_task_rt ---------------------------------------

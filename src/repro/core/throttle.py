@@ -104,3 +104,56 @@ class BandwidthRegulator:
     def next_release(self, core: int, now: float) -> float:
         st = self.cores[core]
         return max(st.stalled_until, now)
+
+    # ---- continuous-time interface (event-driven engine) -----------------
+    # The quantum simulator charges dt-sized packets through ``charge``;
+    # the exact engine instead runs best-effort work over closed intervals
+    # and needs (a) span accounting, (b) the closed-form time at which the
+    # current budget trips, (c) an explicit trip. These are the dt -> 0
+    # limit of the reactive mode (no one-quantum overshoot).
+
+    def window_end(self, core: int, now: float) -> float:
+        st = self.cores[core]
+        self._roll_window(st, now)
+        return st.window_start + st.interval
+
+    def charge_span(self, core: int, rate: float, t0: float,
+                    t1: float) -> None:
+        """Account continuous traffic at ``rate`` units/ms over [t0, t1].
+        Spans may cross regulation-window boundaries; usage carried into
+        the window containing ``t1`` is exactly the traffic generated since
+        that window opened."""
+        st = self.cores[core]
+        self._roll_window(st, t0)
+        amount = rate * (t1 - t0)
+        if t1 < st.window_start + st.interval:
+            st.used += amount
+        else:
+            self._roll_window(st, t1)
+            st.used = rate * (t1 - st.window_start)
+        st.total_used += amount
+
+    def next_trip_time(self, core: int, rate: float, now: float) -> float:
+        """Absolute time at which continuous traffic at ``rate`` exceeds the
+        budget, assuming the rate holds; inf if it never does. Exactly
+        reaching the budget at a window boundary does not trip (usage never
+        *exceeds* the budget)."""
+        st = self.cores[core]
+        self._roll_window(st, now)
+        if st.budget == float("inf") or rate <= 0.0:
+            return float("inf")
+        we = st.window_start + st.interval
+        t = now + max(0.0, st.budget - st.used) / rate
+        if t < we - 1e-12:
+            return t
+        if st.budget / rate < st.interval - 1e-12:
+            return we + st.budget / rate
+        return float("inf")
+
+    def trip(self, core: int, now: float) -> None:
+        """Stall ``core`` until the end of the current regulation window
+        (the budget was exhausted at ``now``)."""
+        st = self.cores[core]
+        self._roll_window(st, now)
+        st.throttle_events += 1
+        st.stalled_until = st.window_start + st.interval

@@ -22,6 +22,8 @@ class Trace:
         self._open: Dict[int, Segment] = {}
 
     def record(self, core: int, label: Optional[str], t0: float, t1: float):
+        if t1 - t0 < 1e-12:      # zero-length (event-engine cascade) — skip
+            return
         seg = self._open.get(core)
         if seg is not None and seg.label == label and \
                 abs(seg.t1 - t0) < 1e-9:
@@ -40,6 +42,23 @@ class Trace:
     def busy(self, label: str) -> float:
         self.finish_view()
         return sum(s.t1 - s.t0 for s in self.segments if s.label == label)
+
+    def intervals(self, label: str, tol: float = 1e-9
+                  ) -> List[Tuple[float, float]]:
+        """Merged [t0, t1) intervals (across cores) during which ``label``
+        ran anywhere. The quantum engine emits dt-sized touching segments,
+        the event engine emits long exact ones; merging makes the two
+        comparable for equivalence checks."""
+        self.finish_view()
+        segs = sorted(((s.t0, s.t1) for s in self.segments
+                       if s.label == label))
+        out: List[Tuple[float, float]] = []
+        for t0, t1 in segs:
+            if out and t0 <= out[-1][1] + tol:
+                out[-1] = (out[-1][0], max(out[-1][1], t1))
+            else:
+                out.append((t0, t1))
+        return out
 
     def finish_view(self):
         if self._open:

@@ -1,0 +1,15 @@
+"""Version gate for the Pallas TPU compiler-params API rename.
+
+jax >= 0.7 exposes ``pltpu.CompilerParams``; 0.4.x-0.6.x call the same
+dataclass ``pltpu.TPUCompilerParams`` (and some early versions only accept
+``dimension_semantics`` via ``mosaic`` params). All four kernels import
+``CompilerParams`` from here so they run under either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _rglru_kernel(loga_ref, b_ref, y_ref, h_scr, *, chunk: int,
                   n_chunks: int):
@@ -67,7 +69,7 @@ def rglru_scan_bc(log_a, b, *, chunk: int = 256, interpret: bool = True):
         out_specs=pl.BlockSpec((1, chunk, C), lambda b_, ci: (b_, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, C), log_a.dtype),
         scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(log_a, b)

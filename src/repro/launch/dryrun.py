@@ -21,7 +21,8 @@ from repro.launch import inputs as I  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.recipes import parallel_for  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
-from repro.roofline.hlo_analysis import analyze as analyze_hlo  # noqa: E402
+from repro.roofline.hlo_analysis import (analyze as analyze_hlo,  # noqa: E402
+                                          xla_cost_analysis)
 from repro.training.optimizer import OptConfig, Optimizer  # noqa: E402
 from repro.training.step import make_train_step, make_train_state, \
     state_pspecs  # noqa: E402
@@ -101,9 +102,7 @@ def run_cell(arch: str, shape_id: str, multi_pod: bool,
         except AttributeError:
             result["memory"] = {"repr": str(mem)}
 
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0]
+        cost = xla_cost_analysis(compiled)
         # NOTE: XLA cost_analysis counts while (scan) bodies once; keep it for
         # reference but derive the roofline inputs from the trip-count-aware
         # HLO analyzer below.

@@ -1,17 +1,31 @@
-"""Dry-run sweep driver: every (arch x shape) cell on the single-pod mesh +
-the multi-pod mesh, cached as results/dryrun/*.json. Each cell runs in a
-fresh subprocess (jax pins the forced device count at first init).
+"""Sweep drivers.
 
-    python -m repro.launch.sweep [--multi-pod-only] [--force] [--cells a:b]
+1. Dry-run compile sweep: every (arch x shape) cell on the single-pod mesh
+   + the multi-pod mesh, cached as results/dryrun/*.json. Each cell runs
+   in a fresh subprocess (jax pins the forced device count at first init).
+
+       python -m repro.launch.sweep [--multi-pod-only] [--force]
+
+2. Monte-Carlo schedulability sweep: random gang tasksets per utilization
+   level, simulated with the exact event-driven engine (Simulator dt=None)
+   and cross-checked against RTA, fanned across worker processes — the
+   evaluation style of the Virtual-Gang (arXiv:1912.10959) and strict-
+   partitioning gang (arXiv:2403.10726) follow-ups.
+
+       python -m repro.launch.sweep --schedulability \\
+           [--utils 0.3,0.5,0.7,0.9] [--n 100] [--procs 8] [--cores 4]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import multiprocessing
 import os
+import random
 import subprocess
 import sys
 import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import valid_cells
 
@@ -47,12 +61,132 @@ def run_one(arch: str, shape: str, multi_pod: bool, force: bool,
         return json.load(f)
 
 
+# ---------------------------------------------------------------------
+# Monte-Carlo schedulability sweep (event-driven engine, process pool)
+# ---------------------------------------------------------------------
+
+def random_gang_taskset(rng: random.Random, n_cores: int, n_tasks: int,
+                        total_util: float):
+    """UUniFast utilizations over ``n_tasks`` gangs, log-uniform periods,
+    random gang widths, rate-monotonic priorities (shorter period = higher
+    prio; ties broken by index so priorities stay distinct — distinct
+    priority per gang is the paper's gang-identity requirement)."""
+    from repro.core.gang import RTTask
+
+    utils: List[float] = []
+    remaining = total_util
+    for i in range(n_tasks - 1):
+        nxt = remaining * rng.random() ** (1.0 / (n_tasks - 1 - i))
+        utils.append(remaining - nxt)
+        remaining = nxt
+    utils.append(remaining)
+
+    periods = [rng.choice((10.0, 20.0, 25.0, 40.0, 50.0, 100.0))
+               for _ in range(n_tasks)]
+    by_rm = sorted(range(n_tasks), key=lambda i: (periods[i], i))
+    prio_of = {idx: n_tasks - rank for rank, idx in enumerate(by_rm)}
+
+    tasks = []
+    for i in range(n_tasks):
+        width = rng.randint(1, n_cores)
+        cores = tuple(rng.sample(range(n_cores), width))
+        wcet = max(utils[i] * periods[i], 1e-3)
+        tasks.append(RTTask(
+            name=f"g{i}", wcet=wcet, period=periods[i], cores=cores,
+            prio=prio_of[i], release_offset=rng.uniform(0, periods[i])))
+    return tasks
+
+
+def _sched_cell(args: Tuple[int, int, int, float, float]) -> Dict:
+    """Pool worker: one random taskset -> exact-sim verdict + RTA verdict.
+    Takes only picklable scalars; tasks are built inside the worker."""
+    seed, n_cores, n_tasks, total_util, cycles = args
+    from repro.core.rta import schedulable
+    from repro.core.sim import Simulator
+
+    rng = random.Random(seed)
+    tasks = random_gang_taskset(rng, n_cores, n_tasks, total_util)
+    horizon = cycles * max(t.period for t in tasks)
+    t0 = time.time()
+    r = Simulator(n_cores, tasks, dt=None).run(horizon)
+    rta = schedulable(tasks)
+    return {
+        "seed": seed,
+        "util": total_util,
+        "sim_ok": sum(r.deadline_misses.values()) == 0,
+        "rta_ok": all(v["ok"] for v in rta.values()),
+        "events": r.events,
+        "wall_s": time.time() - t0,
+    }
+
+
+def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
+                         utils: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
+                         n_per_util: int = 100, cycles: float = 20.0,
+                         processes: Optional[int] = None,
+                         seed: int = 0) -> Dict:
+    """Fan ``n_per_util`` random tasksets per utilization level across a
+    process pool; returns acceptance ratios (simulated + RTA)."""
+    cells = [(seed + 7919 * k + int(1e6 * u), n_cores, n_tasks, u, cycles)
+             for u in utils for k in range(n_per_util)]
+    procs = processes or min(multiprocessing.cpu_count(), 16)
+    if procs > 1:
+        with multiprocessing.Pool(procs) as pool:
+            results = pool.map(_sched_cell, cells, chunksize=4)
+    else:
+        results = [_sched_cell(c) for c in cells]
+
+    rows = []
+    for u in utils:
+        rs = [r for r in results if r["util"] == u]
+        rows.append({
+            "util": u,
+            "n": len(rs),
+            "sim_sched_ratio": sum(r["sim_ok"] for r in rs) / len(rs),
+            "rta_sched_ratio": sum(r["rta_ok"] for r in rs) / len(rs),
+            "events_total": sum(r["events"] for r in rs),
+            "wall_s_total": round(sum(r["wall_s"] for r in rs), 3),
+        })
+    return {"n_cores": n_cores, "n_tasks": n_tasks, "cycles": cycles,
+            "processes": procs, "rows": rows}
+
+
+def run_schedulability(args) -> None:
+    utils = tuple(float(u) for u in args.utils.split(","))
+    out = schedulability_sweep(
+        n_cores=args.cores, n_tasks=args.tasks, utils=utils,
+        n_per_util=args.n, processes=args.procs or None, seed=args.seed)
+    for row in out["rows"]:
+        print(f"util={row['util']:.2f} sim={row['sim_sched_ratio']:.2f} "
+              f"rta={row['rta_sched_ratio']:.2f} n={row['n']} "
+              f"({row['events_total']} events in {row['wall_s_total']}s)")
+    path = args.out or os.path.join(ROOT, "results", "sched_sweep.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--schedulability", action="store_true",
+                    help="Monte-Carlo gang schedulability sweep instead "
+                         "of the dry-run compile sweep")
+    ap.add_argument("--utils", default="0.3,0.5,0.7,0.9")
+    ap.add_argument("--n", type=int, default=100)
+    ap.add_argument("--tasks", type=int, default=4)
+    ap.add_argument("--cores", type=int, default=4)
+    ap.add_argument("--procs", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.schedulability:
+        run_schedulability(args)
+        return
 
     runnable, skipped = valid_cells()
     os.makedirs(OUT, exist_ok=True)

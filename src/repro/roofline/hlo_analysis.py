@@ -35,6 +35,17 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions: newer
+    releases return one properties dict, older ones a 1-element list of
+    dicts (one per partition). Returns the (first) dict, or {} if the
+    backend reports nothing."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def shape_bytes(sig: str) -> int:
     """Total bytes of all array shapes appearing in an HLO type signature."""
     total = 0

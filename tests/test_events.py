@@ -1,0 +1,191 @@
+"""Event-driven engine (core/events.py): paper-number exactness and
+quantum-mode equivalence on the Fig.4 and Fig.5 tasksets.
+
+The exact engine is the dt -> 0 limit of the quantum engine, so agreement
+is asserted within one default quantum (0.05 ms): the quantum reference
+runs at dt=0.025, where its reactive-throttle discretization bias is well
+inside that envelope (the bias is O(dt) per regulation window; see the
+convergence study in DESIGN.md §8.4).
+"""
+import pytest
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import Simulator, matrix_interference
+
+DT_DEFAULT = 0.05          # the quantum engine's default quantum (ms)
+
+
+def fig4_taskset():
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2,
+                mem_budget=1e9)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1,
+                mem_budget=1e9)
+    be = [BETask("tau3", cores=(0, 1, 2, 3))]
+    return [t1, t2], be
+
+
+def fig5_taskset():
+    # benchmarks/fig5_synthetic.py::taskset, restated so the test is
+    # self-contained
+    t1 = RTTask("tau1", wcet=3.5, period=20, cores=(0, 1), prio=2,
+                mem_budget=0.1)
+    t2 = RTTask("tau2", wcet=6.5, period=30, cores=(2, 3), prio=1,
+                mem_budget=0.1)
+    bem = BETask("be_mem", cores=(0, 1, 2, 3), mem_rate=1.0)
+    bec = BETask("be_cpu", cores=(0, 1, 2, 3), mem_rate=0.01)
+    intf = matrix_interference({
+        ("tau1", "tau2"): 2.0, ("tau2", "tau1"): 2.0,
+        ("tau1", "be_mem"): 1.5, ("tau2", "be_mem"): 1.5,
+    })
+    return [t1, t2], [bem, bec], intf
+
+
+# ---------------------------------------------------------------------
+# paper numbers reproduced exactly in dt=None mode (no quantization)
+# ---------------------------------------------------------------------
+
+def test_exact_fig4a_cosched():
+    rts, be = fig4_taskset()
+    r = Simulator(4, rts, be_tasks=be, rt_gang_enabled=False,
+                  dt=None).run(10.0)
+    assert r.engine == "event"
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(4.0)]
+    assert r.slack_time == pytest.approx(28.0)
+
+
+def test_exact_fig4b_rtgang():
+    rts, be = fig4_taskset()
+    r = Simulator(4, rts, be_tasks=be, rt_gang_enabled=True,
+                  dt=None).run(10.0)
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(6.0)]
+    assert r.slack_time == pytest.approx(28.0)
+
+
+def test_exact_fig4c_interference():
+    rts, be = fig4_taskset()
+    intf = matrix_interference({("tau1", "tau2"): 10.0})
+    r = Simulator(4, rts, be_tasks=be, interference=intf,
+                  rt_gang_enabled=False, dt=None).run(10.0)
+    assert r.response_times["tau1"] == [pytest.approx(5.6)]
+    assert r.response_times["tau2"] == [pytest.approx(4.0)]
+    assert r.slack_time == pytest.approx(20.8)
+
+
+def test_exact_rtgang_immune_to_interference():
+    rts, be = fig4_taskset()
+    intf = matrix_interference({("tau1", "tau2"): 10.0,
+                                ("tau2", "tau1"): 100.0})
+    r = Simulator(4, rts, rt_gang_enabled=True, interference=intf,
+                  dt=None).run(10.0)
+    assert r.response_times["tau1"] == [pytest.approx(2.0)]
+    assert r.response_times["tau2"] == [pytest.approx(6.0)]
+
+
+def test_exact_fig2_single_thread_idles_all_other_cores():
+    t1 = RTTask("t1", wcet=4, period=100, cores=(0, 1, 2, 3), prio=1)
+    t2 = RTTask("t2", wcet=2, period=100, cores=(0, 1, 2), prio=2,
+                release_offset=1.0)
+    t3 = RTTask("t3", wcet=1, period=100, cores=(2,), prio=3,
+                release_offset=2.0)
+    r = Simulator(4, [t1, t2, t3], dt=None).run(20.0)
+    r.trace.finish_view()
+    for seg in r.trace.segments:
+        if seg.label in ("t1", "t2"):
+            assert not (seg.t0 < 3.0 - 1e-9 and seg.t1 > 2.0 + 1e-9), \
+                f"{seg.label} overlaps t3 on core {seg.core}"
+    assert r.response_times["t3"] == [pytest.approx(1.0)]
+
+
+def test_exact_fig3_virtual_gang():
+    def vgang():
+        return [RTTask("g1", wcet=3, period=100, cores=(0,), prio=5),
+                RTTask("g2", wcet=2, period=100, cores=(1,), prio=5),
+                RTTask("g3", wcet=1, period=100, cores=(2, 3), prio=5)]
+
+    t4 = RTTask("t4", wcet=1, period=100, cores=(1,), prio=4,
+                release_offset=1.0)
+    r = Simulator(4, vgang() + [t4], dt=None).run(20.0)
+    assert r.response_times["t4"] == [pytest.approx(3.0)]
+
+    t4h = RTTask("t4", wcet=1, period=100, cores=(1,), prio=9,
+                 release_offset=1.0)
+    r = Simulator(4, vgang() + [t4h], dt=None).run(20.0)
+    assert r.response_times["t4"] == [pytest.approx(1.0)]
+    assert r.response_times["g1"] == [pytest.approx(4.0)]
+
+
+def test_exact_throttling_bounds_be_progress():
+    t1 = RTTask("rt", wcet=5, period=10, cores=(0, 1), prio=5,
+                mem_budget=0.2)
+    bem = BETask("be_mem", cores=(2, 3), mem_rate=1.0)
+    r = Simulator(4, [t1], be_tasks=[bem], dt=None,
+                  throttle_mode="reactive").run(10.0)
+    assert r.throttle_events > 0
+    assert r.be_progress["be_mem"] < 2 * 5 * 0.35 + 2 * 5 * 1.0 + 1.0
+
+
+# ---------------------------------------------------------------------
+# quantum-mode equivalence (the ISSUE's acceptance criterion)
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("enabled", [False, True])
+def test_fig4_equivalence(enabled):
+    intf = matrix_interference({("tau1", "tau2"): 10.0})
+    rts, be = fig4_taskset()
+    q = Simulator(4, rts, be_tasks=be, interference=intf,
+                  rt_gang_enabled=enabled, dt=DT_DEFAULT).run(40.0)
+    rts, be = fig4_taskset()
+    e = Simulator(4, rts, be_tasks=be, interference=intf,
+                  rt_gang_enabled=enabled, dt=None).run(40.0)
+    assert e.engine == "event" and q.engine == "quantum"
+    for name in ("tau1", "tau2"):
+        assert len(q.response_times[name]) == len(e.response_times[name])
+        assert abs(q.wcrt(name) - e.wcrt(name)) <= DT_DEFAULT + 1e-9
+    assert q.deadline_misses == e.deadline_misses
+    assert q.slack_time == pytest.approx(e.slack_time, abs=4 * DT_DEFAULT)
+
+
+@pytest.mark.parametrize("enabled", [False, True])
+def test_fig5_equivalence(enabled):
+    # quantum reference at dt=0.025: its O(dt)-per-window throttle bias
+    # stays within the one-default-quantum (0.05 ms) agreement envelope
+    rts, bes, intf = fig5_taskset()
+    q = Simulator(4, rts, be_tasks=bes, interference=intf,
+                  rt_gang_enabled=enabled, dt=0.025,
+                  throttle_mode="reactive").run(120.0)
+    rts, bes, intf = fig5_taskset()
+    e = Simulator(4, rts, be_tasks=bes, interference=intf,
+                  rt_gang_enabled=enabled, dt=None,
+                  throttle_mode="reactive").run(120.0)
+    for name in ("tau1", "tau2"):
+        assert len(q.response_times[name]) == len(e.response_times[name])
+        assert abs(q.wcrt(name) - e.wcrt(name)) <= DT_DEFAULT + 1e-9, name
+        # every job, not just the worst case
+        for rq, re_ in zip(q.response_times[name], e.response_times[name]):
+            assert abs(rq - re_) <= 2 * DT_DEFAULT + 1e-9, name
+    assert q.deadline_misses == e.deadline_misses
+
+
+def test_event_count_is_small():
+    """O(events), not O(horizon/dt): a 1000 ms Fig.5 run needs ~40 events
+    per ms of *activity*, far below the 20k quantum steps."""
+    rts, bes, intf = fig5_taskset()
+    e = Simulator(4, rts, be_tasks=bes, interference=intf,
+                  rt_gang_enabled=True, dt=None,
+                  throttle_mode="reactive").run(1000.0)
+    assert 0 < e.events < 1000.0 / DT_DEFAULT
+    assert len(e.response_times["tau1"]) == 50
+
+
+def test_exact_backlogged_jobs_fifo():
+    """An overloaded task backlogs: releases queue and are served FIFO,
+    with deadline misses counted on completion (same rule as quantum)."""
+    t = RTTask("over", wcet=3, period=2, cores=(0,), prio=5, n_jobs=4)
+    q = Simulator(1, [t], dt=DT_DEFAULT).run(20.0)
+    e = Simulator(1, [t], dt=None).run(20.0)
+    assert q.response_times["over"] == pytest.approx(
+        e.response_times["over"], abs=DT_DEFAULT)
+    assert q.deadline_misses == e.deadline_misses
+    assert e.deadline_misses["over"] > 0

@@ -1,6 +1,5 @@
 """Unit + property tests for the gang-lock state machine (Algorithms 1-4)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.gang import RTTask, Thread, make_virtual_gang, validate_taskset
 from repro.core.glock import GangScheduler

@@ -1,8 +1,8 @@
 """Response-time analysis: exactness on the paper examples and the
 sim-vs-analysis soundness property (RTA bound >= simulated WCRT)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+from _hyp import given, settings, st
 
 from repro.core.gang import RTTask
 from repro.core.rta import (co_sched_wcet, response_time, schedulable,

@@ -1,6 +1,5 @@
 """Bandwidth-regulator invariants (hypothesis property tests)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core.throttle import BandwidthRegulator
 
