@@ -2,13 +2,23 @@
 gangs, run classical single-core RTA, and confirm with the exact simulator —
 including the co-scheduling counterfactual that RTA cannot certify.
 
-    PYTHONPATH=src python examples/schedulability_analysis.py [--sweep]
+    PYTHONPATH=src python examples/schedulability_analysis.py \\
+        [--sweep] [--vgang]
 
 --sweep additionally runs a small Monte-Carlo schedulability sweep (random
 gang tasksets per utilization level, event-driven engine fanned across
 processes; see repro.launch.sweep --schedulability for the full version).
+
+--vgang plots the virtual-gang acceptance-ratio curves from
+results/vgang/*.json (produce them with ``python -m repro.vgang.grid``):
+RT-Gang singleton baseline vs the formation heuristics, per core count
+and width distribution. ASCII always; a PNG per grid file when
+matplotlib is installed.
 """
 import argparse
+import glob
+import json
+import os
 
 from repro.core.gang import RTTask, make_virtual_gang
 from repro.core.rta import co_sched_wcet, schedulable, total_utilization
@@ -66,10 +76,56 @@ def sweep():
               f"{row['rta_sched_ratio']:.0%}")
 
 
+def vgang_curves(out_dir=None):
+    """Plotting hook for the virtual-gang grid (repro.vgang.grid):
+    acceptance ratio vs utilization, one curve per formation heuristic
+    with the RT-Gang singleton baseline."""
+    from repro.launch.sweep import ROOT
+    out_dir = out_dir or os.path.join(ROOT, "results", "vgang")
+    files = sorted(glob.glob(os.path.join(out_dir, "grid_*.json")))
+    if not files:
+        print(f"no grid files under {out_dir}; run "
+              "`PYTHONPATH=src python -m repro.vgang.grid` first")
+        return
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        plt = None
+    from repro.vgang.grid import print_curves
+    for path in files:
+        with open(path) as f:
+            data = json.load(f)
+        rows = sorted(data["rows"], key=lambda r: r["util"])
+        heuristics = list(rows[0]["accept"])
+        print_curves(rows)
+        if plt is not None:
+            fig, ax = plt.subplots(figsize=(5, 3.2))
+            for h in heuristics:
+                ax.plot([r["util"] for r in rows],
+                        [r["accept"][h] for r in rows],
+                        marker="o", label=h)
+            ax.set_xlabel("total gang utilization (single-core equiv.)")
+            ax.set_ylabel("acceptance ratio")
+            ax.set_title(f"{data['n_cores']} cores, {data['dist']} widths")
+            ax.set_ylim(-0.05, 1.05)
+            ax.legend(fontsize=7)
+            fig.tight_layout()
+            png = path.replace(".json", ".png")
+            fig.savefig(png, dpi=150)
+            plt.close(fig)
+            print(f"  -> {png}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--vgang", action="store_true",
+                    help="plot acceptance curves from results/vgang")
     args = ap.parse_args()
     main()
     if args.sweep:
         sweep()
+    if args.vgang:
+        vgang_curves()

@@ -354,7 +354,9 @@ class EventEngine:
             if now >= horizon - _EPS_T:
                 break
             fixed_point()
-            if sched.enabled and sched.g.held_flag and \
+            if sched.enabled and sim.budget_policy is not None:
+                sim.budget_policy.apply(sched.g, reg)
+            elif sched.enabled and sched.g.held_flag and \
                     sched.g.leader is not None:
                 reg.set_gang_budget(sched.g.leader.mem_budget)
             else:

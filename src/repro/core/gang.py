@@ -41,6 +41,11 @@ class RTTask:
     mem_budget: tolerable best-effort memory traffic (bytes or abstract
              units per regulation interval) while this gang runs; 0 = total
              isolation (paper §III-B).
+    mem_intensity: the gang's own memory-traffic intensity in [0, 1] —
+             how aggressive a co-runner it is. Used by the virtual-gang
+             formation heuristics (vgang/formation.py) to avoid packing
+             two memory-hungry gangs into one virtual gang
+             (arXiv:1912.10959 §V).
     """
     name: str
     wcet: float
@@ -48,6 +53,7 @@ class RTTask:
     cores: Tuple[int, ...]
     prio: int
     mem_budget: float = 0.0
+    mem_intensity: float = 0.0
     release_offset: float = 0.0
     n_jobs: Optional[int] = None          # None = unbounded
     wcet_per_core: Optional[Dict[int, float]] = None

@@ -75,6 +75,28 @@ class SimResult:
         rs = self.response_times.get(name) or [float("nan")]
         return max(rs)
 
+    def percentile(self, name: str, q: float) -> float:
+        """q-th percentile (0..100) of the task's response times, linear
+        interpolation between order statistics (numpy's default rule, but
+        dependency-free — SimResult is consumed by pure-python sweeps)."""
+        rs = sorted(self.response_times.get(name) or ())
+        if not rs:
+            return float("nan")
+        k = (len(rs) - 1) * q / 100.0
+        lo = math.floor(k)
+        hi = min(lo + 1, len(rs) - 1)
+        return rs[lo] + (rs[hi] - rs[lo]) * (k - lo)
+
+    def percentiles(self, name: str) -> Dict[str, float]:
+        """p50/p95/p99/p999 latency summary for long-horizon CDF runs
+        (Fig.6-style statistics at >= 10^6 ms horizons, ROADMAP item 2)."""
+        return {"p50": self.percentile(name, 50.0),
+                "p95": self.percentile(name, 95.0),
+                "p99": self.percentile(name, 99.0),
+                "p999": self.percentile(name, 99.9),
+                "max": self.wcrt(name),
+                "n": len(self.response_times.get(name) or ())}
+
 
 class Simulator:
     def __init__(self, n_cores: int, rt_tasks: Sequence[RTTask],
@@ -83,16 +105,23 @@ class Simulator:
                  rt_gang_enabled: bool = True,
                  throttle_mode: str = "reactive",
                  regulation_interval: float = 1.0,
-                 dt: Optional[float] = 0.05):
+                 dt: Optional[float] = 0.05,
+                 budget_policy: Optional["BudgetPolicy"] = None):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
-        same SimResult, O(events) instead of O(horizon/dt)."""
+        same SimResult, O(events) instead of O(horizon/dt).
+
+        ``budget_policy``: optional object with ``apply(glock, regulator)``
+        that sets throttle budgets whenever the gang lock is held, replacing
+        the default leader-budget rule. Virtual gangs use it to enforce the
+        minimum budget over co-running member gangs (vgang/sched.py)."""
         validate_taskset(rt_tasks)
         self.n_cores = n_cores
         self.rt_tasks = list(rt_tasks)
         self.be_tasks = list(be_tasks)
         self.interference = interference
         self.dt = dt
+        self.budget_policy = budget_policy
         self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled)
         self.reg = BandwidthRegulator(n_cores, interval=regulation_interval,
                                       mode=throttle_mode)
@@ -176,7 +205,10 @@ class Simulator:
 
             # set throttle budget from the running gang
             if self.sched.enabled:
-                if self.sched.g.held_flag and self.sched.g.leader is not None:
+                if self.budget_policy is not None:
+                    self.budget_policy.apply(self.sched.g, self.reg)
+                elif self.sched.g.held_flag and \
+                        self.sched.g.leader is not None:
                     self.reg.set_gang_budget(self.sched.g.leader.mem_budget)
                 else:
                     self.reg.set_gang_budget(None)

@@ -54,9 +54,19 @@ class BandwidthRegulator:
         enforced on every core that runs best-effort work (paper §IV-F).
         A budget increase (e.g. the throttling gang departed) lifts stalls
         from the previous regime; usage within the window is kept."""
-        b = float("inf") if budget is None else float(budget)
+        self.set_core_budgets({}, default=budget)
+
+    def set_core_budgets(self, budgets: Dict[int, Optional[float]],
+                         default: Optional[float] = None) -> None:
+        """Per-core budget assignment (virtual gangs: each member gang
+        declares its own tolerable traffic, so the enforced budget can
+        differ per core — see vgang/sched.py). Cores absent from
+        ``budgets`` get ``default``. Same stall-lift rule as
+        ``set_gang_budget``: a budget increase releases the stall."""
         with self._lock:
-            for st in self.cores.values():
+            for c, st in self.cores.items():
+                raw = budgets.get(c, default)
+                b = float("inf") if raw is None else float(raw)
                 if b > st.budget:
                     st.stalled_until = 0.0
                 st.budget = b

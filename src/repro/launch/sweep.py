@@ -13,7 +13,15 @@
    partitioning gang (arXiv:2403.10726) follow-ups.
 
        python -m repro.launch.sweep --schedulability \\
-           [--utils 0.3,0.5,0.7,0.9] [--n 100] [--procs 8] [--cores 4]
+           [--utils 0.3,0.5,0.7,0.9] [--n 100] [--procs 8] [--cores 4] \\
+           [--seed 0]
+
+   Tasksets are batched into a few contiguous shards per utilization
+   level (amortizing worker startup while still using every core);
+   per-taskset seeds derive from --seed via ``taskset_seed``, so runs
+   are reproducible and sharding-independent. The full virtual-gang
+   evaluation grid (formation heuristics x width distributions x
+   4/8/16 cores) extends this driver in ``repro.vgang.grid``.
 """
 from __future__ import annotations
 
@@ -65,6 +73,21 @@ def run_one(arch: str, shape: str, multi_pod: bool, force: bool,
 # Monte-Carlo schedulability sweep (event-driven engine, process pool)
 # ---------------------------------------------------------------------
 
+def uunifast(rng: random.Random, n: int, total_util: float) -> List[float]:
+    """UUniFast: unbiased uniform split of ``total_util`` over ``n`` tasks
+    (Bini & Buttazzo). Shared by this sweep and the virtual-gang grid
+    (repro.vgang.grid); always driven by an explicit seeded rng so every
+    sweep is reproducible."""
+    utils: List[float] = []
+    remaining = total_util
+    for i in range(n - 1):
+        nxt = remaining * rng.random() ** (1.0 / (n - 1 - i))
+        utils.append(remaining - nxt)
+        remaining = nxt
+    utils.append(remaining)
+    return utils
+
+
 def random_gang_taskset(rng: random.Random, n_cores: int, n_tasks: int,
                         total_util: float):
     """UUniFast utilizations over ``n_tasks`` gangs, log-uniform periods,
@@ -73,13 +96,7 @@ def random_gang_taskset(rng: random.Random, n_cores: int, n_tasks: int,
     priority per gang is the paper's gang-identity requirement)."""
     from repro.core.gang import RTTask
 
-    utils: List[float] = []
-    remaining = total_util
-    for i in range(n_tasks - 1):
-        nxt = remaining * rng.random() ** (1.0 / (n_tasks - 1 - i))
-        utils.append(remaining - nxt)
-        remaining = nxt
-    utils.append(remaining)
+    utils = uunifast(rng, n_tasks, total_util)
 
     periods = [rng.choice((10.0, 20.0, 25.0, 40.0, 50.0, 100.0))
                for _ in range(n_tasks)]
@@ -97,10 +114,10 @@ def random_gang_taskset(rng: random.Random, n_cores: int, n_tasks: int,
     return tasks
 
 
-def _sched_cell(args: Tuple[int, int, int, float, float]) -> Dict:
-    """Pool worker: one random taskset -> exact-sim verdict + RTA verdict.
-    Takes only picklable scalars; tasks are built inside the worker."""
-    seed, n_cores, n_tasks, total_util, cycles = args
+def _sched_cell(seed: int, n_cores: int, n_tasks: int, total_util: float,
+                cycles: float) -> Dict:
+    """One random taskset -> exact-sim verdict + RTA verdict. The taskset
+    is rebuilt from the seed, so the cell is reproducible in isolation."""
     from repro.core.rta import schedulable
     from repro.core.sim import Simulator
 
@@ -120,25 +137,57 @@ def _sched_cell(args: Tuple[int, int, int, float, float]) -> Dict:
     }
 
 
+def taskset_seed(seed: int, k: int, total_util: float) -> int:
+    """Per-taskset seed derivation — the reproducibility contract shared
+    by this sweep and the virtual-gang grid (repro.vgang.grid): results
+    are a pure function of (--seed, taskset index, utilization level),
+    independent of how tasksets are batched across workers."""
+    return seed + 7919 * k + int(1e6 * total_util)
+
+
+def _sched_level(args: Tuple[int, int, int, float, float, int, int]
+                 ) -> List[Dict]:
+    """Pool worker: one contiguous shard of a utilization level's
+    tasksets in one process (ROADMAP item 4 — interpreter startup and
+    import cost amortized over the shard, not paid per taskset).
+    Per-taskset seeds use ``taskset_seed`` with the absolute index, so
+    results are identical for any sharding. Aggregation stays in the
+    parent."""
+    seed, n_cores, n_tasks, total_util, cycles, k0, k1 = args
+    return [_sched_cell(taskset_seed(seed, k, total_util),
+                        n_cores, n_tasks, total_util, cycles)
+            for k in range(k0, k1)]
+
+
 def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
                          utils: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
                          n_per_util: int = 100, cycles: float = 20.0,
                          processes: Optional[int] = None,
                          seed: int = 0) -> Dict:
-    """Fan ``n_per_util`` random tasksets per utilization level across a
-    process pool; returns acceptance ratios (simulated + RTA)."""
-    cells = [(seed + 7919 * k + int(1e6 * u), n_cores, n_tasks, u, cycles)
-             for u in utils for k in range(n_per_util)]
-    procs = processes or min(multiprocessing.cpu_count(), 16)
+    """Run ``n_per_util`` random tasksets per utilization level in
+    batched shard workers (a few shards per level — enough to use every
+    core, orders of magnitude fewer process tasks than one per taskset),
+    aggregating acceptance ratios (simulated + RTA) in the parent."""
+    procs = max(1, processes or min(multiprocessing.cpu_count(), 16))
+    shards_per_level = max(1, -(-procs // max(1, len(utils))))
+    shards_per_level = min(shards_per_level, n_per_util)
+    step = -(-n_per_util // shards_per_level)
+    levels = [(seed, n_cores, n_tasks, u, cycles, k0,
+               min(k0 + step, n_per_util))
+              for u in utils for k0 in range(0, n_per_util, step)]
+    procs = min(procs, len(levels))
     if procs > 1:
         with multiprocessing.Pool(procs) as pool:
-            results = pool.map(_sched_cell, cells, chunksize=4)
+            shards = pool.map(_sched_level, levels, chunksize=1)
     else:
-        results = [_sched_cell(c) for c in cells]
+        shards = [_sched_level(lv) for lv in levels]
 
+    by_util: Dict[float, List[Dict]] = {u: [] for u in utils}
+    for (s, _, _, u, _, _, _), rs in zip(levels, shards):
+        by_util[u].extend(rs)
     rows = []
     for u in utils:
-        rs = [r for r in results if r["util"] == u]
+        rs = by_util[u]
         rows.append({
             "util": u,
             "n": len(rs),
@@ -148,7 +197,7 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
             "wall_s_total": round(sum(r["wall_s"] for r in rs), 3),
         })
     return {"n_cores": n_cores, "n_tasks": n_tasks, "cycles": cycles,
-            "processes": procs, "rows": rows}
+            "processes": procs, "seed": seed, "rows": rows}
 
 
 def run_schedulability(args) -> None:

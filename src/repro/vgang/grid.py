@@ -1,0 +1,266 @@
+"""The virtual-gang acceptance-ratio evaluation grid (arXiv:1912.10959
+§VI) on the exact event engine — the headline artifact: RT-Gang vs
+virtual-gang acceptance curves.
+
+Grid axes:
+
+* machine size M in {4, 8, 16} cores;
+* gang-width distribution: ``light`` (narrow gangs, w <= M/4), ``mixed``
+  (w <= M/2), ``heavy`` (M/2 <= w <= M);
+* total gang utilization level (the single-core-equivalent sum C_i/P_i
+  — note plain RT-Gang can never accept a set above 1.0, while packed
+  virtual gangs can, which is the entire point of the follow-up paper);
+* formation heuristic: ``rtgang`` (singletons = the baseline policy),
+  ``ffd``, ``bestfit``, ``intfaware`` (formation.py).
+
+Per (M, dist, util) cell — one batched worker process per cell, like the
+per-level batching of launch/sweep.py --schedulability — n random
+tasksets are drawn (UUniFast utilizations, per-distribution widths,
+random memory intensities feeding ``intensity_interference``), each
+heuristic forms virtual gangs, and vgang RTA (rta.py) yields the
+acceptance verdict. The first ``sim_check`` tasksets of every cell are
+also run through the event engine under VirtualGangPolicy and checked
+against the RTA verdict (RTA accept must imply a miss-free simulation —
+soundness violations are counted and must be zero).
+
+    PYTHONPATH=src python -m repro.vgang.grid [--smoke] [--seed 0]
+        [--cores 4,8,16] [--dists light,mixed,heavy] [--n 50]
+        [--utils 0.4,0.8,...] [--heuristics ffd,bestfit,intfaware]
+        [--sim-check 2] [--gamma 0.5] [--out results/vgang]
+
+Writes results/vgang/grid_{M}c_{dist}.json per (M, dist) plus a
+combined results/vgang/summary.json; plot/print the curves with
+``python examples/schedulability_analysis.py --vgang``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import os
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.gang import RTTask
+from repro.launch.sweep import ROOT, taskset_seed, uunifast
+from repro.vgang.formation import (HEURISTICS, assign_priorities,
+                                   intensity_interference, singleton_vgangs,
+                                   total_vgang_utilization)
+from repro.vgang.rta import accepts
+from repro.vgang.sched import VirtualGangPolicy
+
+OUT_DEFAULT = os.path.join(ROOT, "results", "vgang")
+
+# gang-width distributions (paper §VI: light/mixed/heavy mixes)
+def _width_light(rng: random.Random, m: int) -> int:
+    return rng.randint(1, max(1, m // 4))
+
+
+def _width_mixed(rng: random.Random, m: int) -> int:
+    return rng.randint(1, max(1, m // 2))
+
+
+def _width_heavy(rng: random.Random, m: int) -> int:
+    return rng.randint(max(1, m // 2), m)
+
+
+WIDTH_DISTS = {"light": _width_light, "mixed": _width_mixed,
+               "heavy": _width_heavy}
+
+PERIODS = (20.0, 40.0, 80.0)      # small pool -> same-period groups form
+
+
+def random_vgang_taskset(rng: random.Random, n_cores: int, n_tasks: int,
+                         total_util: float, dist: str = "mixed"
+                         ) -> List[RTTask]:
+    """Random gang taskset for the grid: UUniFast utilizations, widths
+    from the named distribution, memory intensity in [0, 1] (drives the
+    interference model and the interference-aware heuristic). Releases
+    are synchronous (offset 0 = the critical instant) and priorities are
+    provisional — formation reassigns them per virtual gang."""
+    width_of = WIDTH_DISTS[dist]
+    utils = uunifast(rng, n_tasks, total_util)
+    tasks = []
+    for i in range(n_tasks):
+        period = rng.choice(PERIODS)
+        width = width_of(rng, n_cores)
+        wcet = max(utils[i] * period, 1e-3)
+        tasks.append(RTTask(
+            name=f"g{i}", wcet=wcet, period=period,
+            cores=tuple(range(width)), prio=n_tasks - i,
+            mem_intensity=rng.random()))
+    return tasks
+
+
+def n_tasks_for(n_cores: int) -> int:
+    """More cores -> more gangs to pack (4 -> 5, 8 -> 7, 16 -> 11)."""
+    return 3 + (n_cores + 1) // 2
+
+
+def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
+                           int, float, float]) -> Dict:
+    """Pool worker: one (cores, dist, util) cell — all n tasksets, all
+    heuristics, in one process (batched, as in sweep._sched_level)."""
+    (seed, n_cores, dist, util, n_sets, heuristics, sim_check, gamma,
+     cycles) = args
+    accept = {h: 0 for h in ("rtgang", *heuristics)}
+    sim_accept = {h: 0 for h in ("rtgang", *heuristics)}
+    sim_n = 0
+    soundness_violations = 0
+    util_gain = 0.0
+    t0 = time.time()
+    n_tasks = n_tasks_for(n_cores)
+    for k in range(n_sets):
+        rng = random.Random(taskset_seed(seed, k, util))
+        tasks = random_vgang_taskset(rng, n_cores, n_tasks, util, dist)
+        intf = intensity_interference(tasks, gamma)
+        formed = {"rtgang": singleton_vgangs(tasks)}
+        for h in heuristics:
+            formed[h] = HEURISTICS[h](tasks, n_cores, intf)
+        check_sim = k < sim_check
+        if check_sim:
+            sim_n += 1
+        base_util = total_vgang_utilization(formed["rtgang"], intf)
+        best_util = min(total_vgang_utilization(formed[h], intf)
+                        for h in formed)
+        util_gain += base_util - best_util
+        for h, vgangs in formed.items():
+            vgangs = assign_priorities(vgangs)
+            # one-gang-at-a-time: only same-vgang members ever co-run, so
+            # intf only enters through each vgang's inflated WCET (and
+            # inflates nothing for the rtgang singleton baseline)
+            rta_ok = accepts(vgangs, intf)
+            accept[h] += rta_ok
+            if check_sim:
+                policy = VirtualGangPolicy(vgangs, n_cores, intf,
+                                           auto_prio=False)
+                horizon = cycles * max(t.period for t in tasks)
+                r = policy.simulate(horizon)
+                sim_ok = sum(r.deadline_misses.values()) == 0
+                sim_accept[h] += sim_ok
+                if rta_ok and not sim_ok:
+                    soundness_violations += 1
+    return {
+        "n_cores": n_cores, "dist": dist, "util": util, "n": n_sets,
+        "accept": {h: c / n_sets for h, c in accept.items()},
+        "sim_accept": ({h: c / sim_n for h, c in sim_accept.items()}
+                       if sim_n else None),
+        "sim_n": sim_n,
+        "soundness_violations": soundness_violations,
+        "mean_util_gain": round(util_gain / n_sets, 4),
+        "wall_s": round(time.time() - t0, 3),
+    }
+
+
+def run_grid(cores: Sequence[int] = (4, 8, 16),
+             dists: Sequence[str] = ("light", "mixed", "heavy"),
+             utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
+                                       1.6, 2.0),
+             heuristics: Sequence[str] = ("ffd", "bestfit", "intfaware"),
+             n_per_cell: int = 50, sim_check: int = 2, gamma: float = 0.5,
+             cycles: float = 20.0, seed: int = 0,
+             processes: Optional[int] = None,
+             out_dir: str = OUT_DEFAULT) -> Dict:
+    """Run the full grid; one batched worker per (cores, dist, util)
+    cell; aggregate and write per-(cores, dist) curve files + summary."""
+    # the singleton baseline is always evaluated under its curve label
+    # "rtgang"; accept (and drop) it here so `--heuristics rtgang,ffd`
+    # means what it reads as
+    heuristics = tuple(h for h in heuristics if h != "rtgang")
+    unknown = [h for h in heuristics if h not in HEURISTICS]
+    if unknown:
+        raise ValueError(f"unknown heuristics {unknown}; "
+                         f"known: rtgang, {', '.join(sorted(HEURISTICS))}")
+    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), sim_check,
+              gamma, cycles)
+             for m in cores for d in dists for u in utils]
+    procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
+    procs = max(1, min(procs, len(cells)))
+    t0 = time.time()
+    if procs > 1:
+        with multiprocessing.Pool(procs) as pool:
+            results = pool.map(_grid_cell, cells, chunksize=1)
+    else:
+        results = [_grid_cell(c) for c in cells]
+
+    summary = {"seed": seed, "gamma": gamma, "cycles": cycles,
+               "n_per_cell": n_per_cell, "sim_check": sim_check,
+               "heuristics": ["rtgang", *heuristics],
+               "utils": list(utils),
+               "soundness_violations": sum(r["soundness_violations"]
+                                           for r in results),
+               "wall_s": round(time.time() - t0, 3),
+               "files": []}
+    os.makedirs(out_dir, exist_ok=True)
+    for m in cores:
+        for d in dists:
+            rows = [r for r in results
+                    if r["n_cores"] == m and r["dist"] == d]
+            rows.sort(key=lambda r: r["util"])
+            path = os.path.join(out_dir, f"grid_{m}c_{d}.json")
+            with open(path, "w") as f:
+                json.dump({"n_cores": m, "dist": d, "seed": seed,
+                           "gamma": gamma, "rows": rows}, f, indent=1)
+            summary["files"].append(os.path.relpath(path, ROOT))
+    with open(os.path.join(out_dir, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    return {"summary": summary, "results": results}
+
+
+def print_curves(results: List[Dict]) -> None:
+    keys = sorted({(r["n_cores"], r["dist"]) for r in results})
+    for m, d in keys:
+        rows = sorted((r for r in results
+                       if r["n_cores"] == m and r["dist"] == d),
+                      key=lambda r: r["util"])
+        heuristics = list(rows[0]["accept"])
+        print(f"\n{m} cores, {d} widths (acceptance ratio per util):")
+        header = "  util  " + "".join(f"{h:>10}" for h in heuristics)
+        print(header)
+        for r in rows:
+            line = f"  {r['util']:<5.2f} " + "".join(
+                f"{r['accept'][h]:>10.2f}" for h in heuristics)
+            print(line)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cell: 2 utils x 2 heuristics x 4 cores")
+    ap.add_argument("--cores", default="4,8,16")
+    ap.add_argument("--dists", default="light,mixed,heavy")
+    ap.add_argument("--utils", default="0.4,0.7,0.9,1.0,1.1,1.2,1.4,1.6,2.0")
+    ap.add_argument("--heuristics", default="ffd,bestfit,intfaware")
+    ap.add_argument("--n", type=int, default=50)
+    ap.add_argument("--sim-check", type=int, default=2)
+    ap.add_argument("--gamma", type=float, default=0.5)
+    ap.add_argument("--cycles", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--procs", type=int, default=0)
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.cores, args.dists = "4", "mixed"
+        args.utils, args.heuristics = "0.8,1.6", "ffd,intfaware"
+        args.n, args.sim_check = 10, 1
+
+    out = run_grid(
+        cores=tuple(int(c) for c in args.cores.split(",")),
+        dists=tuple(args.dists.split(",")),
+        utils=tuple(float(u) for u in args.utils.split(",")),
+        heuristics=tuple(args.heuristics.split(",")),
+        n_per_cell=args.n, sim_check=args.sim_check, gamma=args.gamma,
+        cycles=args.cycles, seed=args.seed,
+        processes=args.procs or None, out_dir=args.out)
+    print_curves(out["results"])
+    s = out["summary"]
+    print(f"\nwrote {len(s['files'])} curve files + summary to "
+          f"{args.out} in {s['wall_s']}s "
+          f"(soundness violations: {s['soundness_violations']})")
+    return 1 if s["soundness_violations"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""Response-time analysis for virtual-gang tasksets.
+
+Under one-gang-at-a-time, a virtual gang is one scheduling unit, so the
+RT-Gang transform (core/rta.py, paper §III-B) applies unchanged with the
+virtual gang's *inflated* WCET standing in for the gang WCET:
+
+    R_v = C_v + B_v + sum_{u in hp(v)} ceil(R_v / P_u) * C_u
+    C_v = max_i C_i * max_{j != i} intf(i, j)      (formation.py)
+
+Implementation is literal reuse: each virtual gang collapses to its
+single-core-equivalent RTTask and the existing Audsley fixed point runs
+verbatim. A real gang is the degenerate one-member virtual gang (C_v =
+gang WCET exactly — the factor over zero co-members is 1.0), so
+``schedulable_vgangs(singleton_vgangs(ts))`` reproduces
+``core.rta.schedulable(ts)`` bit-for-bit; tests/test_vgang.py asserts
+float equality.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.gang import RTTask
+from repro.core import rta as core_rta
+from repro.core.sim import PairwiseInterference, no_interference
+from repro.vgang.formation import VirtualGang
+
+
+def vgang_equivalent_task(
+        vg: VirtualGang,
+        interference: PairwiseInterference = no_interference) -> RTTask:
+    """Collapse a virtual gang to the RTTask the single-core transform
+    sees: inflated WCET, the virtual gang's period and priority."""
+    return RTTask(name=vg.name, wcet=vg.inflated_wcet(interference),
+                  period=vg.period, cores=tuple(range(max(1, vg.width))),
+                  prio=vg.prio, mem_budget=vg.mem_budget)
+
+
+def vgang_taskset(vgangs: Sequence[VirtualGang],
+                  interference: PairwiseInterference = no_interference
+                  ) -> List[RTTask]:
+    """Collapse a formed set for analysis. Distinct priority per virtual
+    gang is the gang-identity requirement — freshly formed vgangs all
+    carry the default prio 0, and analyzing them that way would silently
+    drop every inter-vgang interference term (hp() is strictly-higher
+    priorities only), so duplicates are an error, not a verdict."""
+    prios = [vg.prio for vg in vgangs]
+    if len(set(prios)) != len(prios):
+        raise ValueError(
+            "virtual gangs must carry distinct priorities before RTA — "
+            "run formation output through formation.assign_priorities()")
+    return [vgang_equivalent_task(vg, interference) for vg in vgangs]
+
+
+def response_time_vgang(
+        vg: VirtualGang, vgangs: Sequence[VirtualGang],
+        interference: PairwiseInterference = no_interference,
+        blocking: float = 0.0, crpd: float = 0.0) -> Optional[float]:
+    """WCRT of one virtual gang within a formed taskset (None =
+    divergent, as in core/rta.py). ``vg`` is matched by name, which is
+    unique within a formed set (each gang joins exactly one vgang)."""
+    eq = vgang_taskset(vgangs, interference)
+    mine = [t for t in eq if t.name == vg.name]
+    if not mine:
+        raise ValueError(f"{vg.name!r} is not in the formed set "
+                         f"{[v.name for v in vgangs]}")
+    return core_rta.response_time(mine[0], eq, blocking=blocking,
+                                  crpd=crpd)
+
+
+def schedulable_vgangs(
+        vgangs: Sequence[VirtualGang],
+        interference: PairwiseInterference = no_interference,
+        blocking: float = 0.0, crpd: float = 0.0) -> Dict[str, Dict]:
+    """Per-virtual-gang response times vs deadlines, keyed by vgang name
+    — same row shape as core.rta.schedulable."""
+    return core_rta.schedulable(vgang_taskset(vgangs, interference),
+                                blocking=blocking, crpd=crpd)
+
+
+def accepts(vgangs: Sequence[VirtualGang],
+            interference: PairwiseInterference = no_interference,
+            blocking: float = 0.0, crpd: float = 0.0) -> bool:
+    """Single-bit admission verdict for the evaluation grid."""
+    res = schedulable_vgangs(vgangs, interference, blocking=blocking,
+                             crpd=crpd)
+    return all(v["ok"] for v in res.values())

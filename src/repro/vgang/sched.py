@@ -1,0 +1,116 @@
+"""VirtualGangPolicy — run formed virtual gangs on the simulator engines.
+
+The glock state machine already *is* the virtual-gang mechanism: gangs
+sharing one RT priority join the running gang (Algorithm 1 line 14-15,
+RT-Gang §IV-E). The policy therefore:
+
+* flattens the formed virtual gangs into member RTTasks sharing the
+  virtual gang's priority, remapped onto disjoint core blocks and
+  released synchronously — so the event engine (core/events.py)
+  dispatches each virtual gang as a unit;
+* acts as the Simulator's ``budget_policy``: while a virtual gang holds
+  the lock, every core's throttle budget is the minimum over the
+  *currently co-running* members (per-member budgets — when a short
+  member finishes its job mid-gang, the surviving members' higher
+  tolerance is applied immediately). Cores occupied by members carry no
+  best-effort work, so they are set unconstrained. This replaces the
+  engine's default leader-budget rule, which would arbitrarily pick
+  whichever member acquired the lock first.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import (PairwiseInterference, SimResult, Simulator,
+                            no_interference)
+from repro.vgang.formation import VirtualGang, assign_priorities
+from repro.vgang.rta import schedulable_vgangs
+
+
+class VirtualGangPolicy:
+    """Budget policy + taskset builder for a formed virtual-gang set.
+
+    ``vgangs`` need distinct priorities; pass ``auto_prio=True`` (default)
+    to (re)assign rate-monotonic priorities via formation.assign_priorities.
+    """
+
+    def __init__(self, vgangs: Sequence[VirtualGang], n_cores: int,
+                 interference: PairwiseInterference = no_interference,
+                 auto_prio: bool = True):
+        prios = [vg.prio for vg in vgangs]
+        if auto_prio and len(set(prios)) != len(prios):
+            vgangs = assign_priorities(vgangs)
+        self.vgangs: List[VirtualGang] = list(vgangs)
+        self.n_cores = n_cores
+        self.interference = interference
+        for vg in self.vgangs:
+            if vg.width > n_cores:
+                raise ValueError(f"virtual gang {vg.name!r} needs "
+                                 f"{vg.width} cores, machine has {n_cores}")
+        self._by_prio: Dict[int, VirtualGang] = {
+            vg.prio: vg for vg in self.vgangs}
+        if len(self._by_prio) != len(self.vgangs):
+            raise ValueError("virtual gangs must have distinct priorities")
+        self._members: List[RTTask] = []
+        self._budget: Dict[int, float] = {}       # member uid -> budget
+        for vg in self.vgangs:
+            cursor = 0
+            for m in vg.members:
+                cores = tuple(range(cursor, cursor + m.n_threads))
+                cursor += m.n_threads
+                wpc = None
+                if m.wcet_per_core:
+                    wpc = {new: m.wcet_per_core.get(old, m.wcet)
+                           for old, new in zip(m.cores, cores)}
+                # members of one virtual gang release together (one unit)
+                member = dataclasses.replace(
+                    m, prio=vg.prio, cores=cores, release_offset=0.0,
+                    wcet_per_core=wpc)
+                self._members.append(member)
+                self._budget[member.uid] = m.mem_budget
+
+    # ---- taskset --------------------------------------------------------
+    def taskset(self) -> List[RTTask]:
+        """Flattened member gangs: shared per-vgang priority, disjoint
+        core blocks, synchronous release — feed to Simulator."""
+        return list(self._members)
+
+    # ---- BudgetPolicy interface (Simulator.budget_policy) ---------------
+    def apply(self, g, reg) -> None:
+        """Set throttle budgets from the running virtual gang's live
+        members (called by both engines whenever scheduling settles)."""
+        if not g.held_flag or g.leader is None:
+            reg.set_gang_budget(None)
+            return
+        vg = self._by_prio.get(g.leader.prio)
+        if vg is None:                   # foreign gang: default rule
+            reg.set_gang_budget(g.leader.mem_budget)
+            return
+        live_uids = {th.task.uid for th in g.gthreads if th is not None}
+        budgets = [self._budget[u] for u in live_uids if u in self._budget]
+        if not budgets:                  # hand-off instant: whole gang
+            budgets = [m.mem_budget for m in vg.members]
+        floor = min(budgets)
+        occupied = {th.core for th in g.gthreads if th is not None}
+        reg.set_core_budgets({c: None for c in occupied}, default=floor)
+
+    # ---- drivers --------------------------------------------------------
+    def build_simulator(self, be_tasks: Sequence[BETask] = (),
+                        interference: Optional[PairwiseInterference] = None,
+                        dt: Optional[float] = None,
+                        **kwargs) -> Simulator:
+        """Simulator over the flattened members with this policy wired in
+        (dt=None: exact event engine)."""
+        return Simulator(self.n_cores, self.taskset(), be_tasks=be_tasks,
+                         interference=interference or self.interference,
+                         rt_gang_enabled=True, dt=dt,
+                         budget_policy=self, **kwargs)
+
+    def simulate(self, horizon: float, **kwargs) -> SimResult:
+        return self.build_simulator(**kwargs).run(horizon)
+
+    def rta(self) -> Dict[str, Dict]:
+        """Vgang RTA verdicts for the formed set (vgang/rta.py)."""
+        return schedulable_vgangs(self.vgangs, self.interference)

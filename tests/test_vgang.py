@@ -1,0 +1,371 @@
+"""Virtual-gang subsystem (src/repro/vgang/): formation heuristics vs the
+exhaustive optimum, vgang RTA degenerate-case equivalence with core/rta.py,
+event-engine agreement with vgang RTA on the paper tasksets, per-member
+throttle budgets, SimResult percentiles and sweep reproducibility."""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import rta as core_rta
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import SimResult, Simulator, matrix_interference
+from repro.core.tracing import Trace
+from repro.launch.sweep import (_sched_cell, schedulability_sweep,
+                                taskset_seed)
+from repro.vgang.formation import (HEURISTICS, VirtualGang,
+                                   assign_priorities, exhaustive_optimal,
+                                   first_fit_decreasing,
+                                   intensity_interference,
+                                   interference_aware, singleton_vgangs,
+                                   total_vgang_utilization)
+from repro.vgang.grid import random_vgang_taskset, run_grid
+from repro.vgang.rta import (response_time_vgang, schedulable_vgangs,
+                             vgang_equivalent_task)
+from repro.vgang.sched import VirtualGangPolicy
+
+ALL_FORMERS = dict(HEURISTICS)
+
+
+def random_case(seed, n_cores=4, n_tasks=5, util=1.0, dist="mixed",
+                gamma=0.5):
+    rng = random.Random(seed)
+    tasks = random_vgang_taskset(rng, n_cores, n_tasks, util, dist)
+    return tasks, intensity_interference(tasks, gamma)
+
+
+# ---------------------------------------------------------------------
+# formation invariants + heuristics vs the exhaustive optimum
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("hname", sorted(ALL_FORMERS))
+def test_formation_invariants(hname):
+    """Every heuristic yields a true partition: each gang in exactly one
+    virtual gang, members share a period, widths fit the machine."""
+    for seed in range(5):
+        tasks, intf = random_case(seed, util=1.2)
+        vgangs = ALL_FORMERS[hname](tasks, 4, intf)
+        names = [m.name for vg in vgangs for m in vg.members]
+        assert sorted(names) == sorted(t.name for t in tasks)
+        for vg in vgangs:
+            assert vg.width <= 4
+            assert len({m.period for m in vg.members}) == 1
+
+
+def test_heuristics_vs_exhaustive_optimum():
+    """No heuristic packs below the exhaustive minimum of total inflated
+    utilization. The cost-aware heuristic additionally never packs worse
+    than the singleton baseline (it merges only when the merge is
+    cheaper than standing alone); the width-greedy packers may, since
+    they merge on fit, not on cost."""
+    for seed in range(6):
+        tasks, intf = random_case(seed, util=1.0)
+        opt = total_vgang_utilization(exhaustive_optimal(tasks, 4, intf),
+                                      intf)
+        base = total_vgang_utilization(singleton_vgangs(tasks), intf)
+        assert opt <= base + 1e-9
+        for hname, h in ALL_FORMERS.items():
+            got = total_vgang_utilization(h(tasks, 4, intf), intf)
+            assert got >= opt - 1e-9, (hname, seed, got, opt)
+        u_ia = total_vgang_utilization(interference_aware(tasks, 4, intf),
+                                       intf)
+        assert u_ia <= base + 1e-9, (seed, u_ia, base)
+
+
+def test_interference_aware_separates_memory_heavy_gangs():
+    """Crafted case: two memory-hungry gangs inflate each other 2x, two
+    quiet gangs are free to pack. FFD (width-greedy) pairs the heavies;
+    the interference-aware rule keeps them apart and matches the
+    exhaustive optimum."""
+    mk = lambda n, w, c, s: RTTask(n, wcet=c, period=20.0,
+                                   cores=tuple(range(w)), prio=1,
+                                   mem_intensity=s)
+    tasks = [mk("h1", 2, 6.0, 1.0), mk("h2", 2, 2.0, 1.0),
+             mk("l1", 1, 6.0, 0.0), mk("l2", 1, 2.0, 0.0)]
+    intf = intensity_interference(tasks, gamma=1.0)
+    u_ffd = total_vgang_utilization(first_fit_decreasing(tasks, 4, intf),
+                                    intf)
+    u_ia = total_vgang_utilization(interference_aware(tasks, 4, intf), intf)
+    u_opt = total_vgang_utilization(exhaustive_optimal(tasks, 4, intf),
+                                    intf)
+    assert u_ia == pytest.approx(u_opt)
+    assert u_ffd > u_ia + 0.1
+    # the heavies ended up in different virtual gangs
+    for vg in interference_aware(tasks, 4, intf):
+        heavies = [m for m in vg.members if m.mem_intensity > 0.5]
+        assert len(heavies) <= 1
+
+
+# ---------------------------------------------------------------------
+# vgang RTA: degenerate one-member case == core/rta.py, bit for bit
+# ---------------------------------------------------------------------
+
+def test_singleton_vgang_rta_equals_core_rta_exactly():
+    """A real gang is the degenerate one-member virtual gang: the vgang
+    RTA path must reproduce core/rta.py bit for bit (same taskset order,
+    so even float summation order matches)."""
+    for seed in range(5):
+        tasks, _ = random_case(seed, util=0.9)
+        vgangs = singleton_vgangs(tasks)      # keeps each task's prio
+        got = schedulable_vgangs(vgangs)
+        want = core_rta.schedulable(tasks)
+        assert set(got) == set(want)
+        for name in want:
+            assert got[name]["wcrt"] == want[name]["wcrt"], name  # exact
+            assert got[name]["ok"] == want[name]["ok"], name
+
+
+def test_singleton_response_time_exact_paper_numbers():
+    """The Fig.4 pair through the vgang path gives the paper's exact
+    2 ms / 6 ms response times."""
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1)
+    vgangs = singleton_vgangs([t1, t2])
+    assert response_time_vgang(vgangs[0], vgangs) == pytest.approx(2.0)
+    assert response_time_vgang(vgangs[1], vgangs) == pytest.approx(6.0)
+
+
+def test_rta_rejects_unprioritized_formation_output():
+    """Freshly formed vgangs all carry the default prio 0; analyzing
+    them that way would drop every inter-vgang interference term, so the
+    RTA entry points refuse instead of returning optimistic verdicts."""
+    tasks, intf = random_case(0, util=1.9)
+    vgangs = first_fit_decreasing(tasks, 4, intf)
+    if len(vgangs) > 1:
+        with pytest.raises(ValueError, match="distinct priorities"):
+            schedulable_vgangs(vgangs, intf)
+    assert isinstance(
+        schedulable_vgangs(assign_priorities(vgangs), intf), dict)
+
+
+def test_vgang_equivalent_task_inflation():
+    """A two-member vgang's equivalent task carries the max-of-pairwise
+    inflated WCET and the most sensitive member's budget."""
+    a = RTTask("a", wcet=2.0, period=10, cores=(0,), prio=1,
+               mem_budget=5.0)
+    b = RTTask("b", wcet=3.0, period=10, cores=(0, 1), prio=1,
+               mem_budget=0.5)
+    vg = VirtualGang("a+b", [a, b], prio=7)
+    intf = matrix_interference({("a", "b"): 4.0, ("b", "a"): 1.5})
+    eq = vgang_equivalent_task(vg, intf)
+    assert eq.wcet == pytest.approx(max(2.0 * 4.0, 3.0 * 1.5))
+    assert eq.period == 10 and eq.prio == 7
+    assert eq.mem_budget == pytest.approx(0.5)
+    assert eq.n_threads == vg.width == 3
+
+
+# ---------------------------------------------------------------------
+# event engine under VirtualGangPolicy vs vgang RTA (paper tasksets)
+# ---------------------------------------------------------------------
+
+def fig4_pair():
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1)
+    return [t1, t2]
+
+
+def test_fig4_merged_vgang_sim_matches_rta_schedulable():
+    """tau1+tau2 merged into one width-4 virtual gang, no interference:
+    RTA accepts (C_v = 4 <= 10) and the event engine runs miss-free with
+    the members co-executing (tau1 finishes at 2, not serialized to 6)."""
+    vg = assign_priorities([VirtualGang("v", fig4_pair())])
+    assert all(v["ok"] for v in schedulable_vgangs(vg).values())
+    pol = VirtualGangPolicy(vg, 4, auto_prio=False)
+    r = pol.simulate(40.0)
+    assert r.engine == "event"
+    assert sum(r.deadline_misses.values()) == 0
+    assert r.response_times["tau1"][0] == pytest.approx(2.0)
+    assert r.response_times["tau2"][0] == pytest.approx(4.0)
+
+
+def test_fig4_merged_vgang_sim_matches_rta_unschedulable():
+    """Same merge under 10x mutual interference: the inflated WCET blows
+    past the period, RTA rejects, and the simulated members indeed miss
+    — verdicts agree on the negative side too."""
+    intf = matrix_interference({("tau1", "tau2"): 10.0,
+                                ("tau2", "tau1"): 10.0})
+    vg = assign_priorities([VirtualGang("v", fig4_pair())])
+    assert not all(v["ok"] for v in schedulable_vgangs(vg, intf).values())
+    pol = VirtualGangPolicy(vg, 4, intf, auto_prio=False)
+    r = pol.simulate(40.0)
+    assert sum(r.deadline_misses.values()) > 0
+
+
+def test_fig5_singletons_sim_matches_rta():
+    """Fig.5 taskset as singleton virtual gangs: RTA accepts and bounds
+    the simulated response times (soundness), so the verdicts agree."""
+    t1 = RTTask("tau1", wcet=3.5, period=20, cores=(0, 1), prio=2)
+    t2 = RTTask("tau2", wcet=6.5, period=30, cores=(2, 3), prio=1)
+    intf = matrix_interference({("tau1", "tau2"): 2.0,
+                                ("tau2", "tau1"): 2.0})
+    vgangs = assign_priorities(singleton_vgangs([t1, t2]))
+    rta = schedulable_vgangs(vgangs, intf)
+    assert all(v["ok"] for v in rta.values())
+    pol = VirtualGangPolicy(vgangs, 4, intf, auto_prio=False)
+    r = pol.simulate(20 * 30.0)
+    assert sum(r.deadline_misses.values()) == 0
+    for name in ("tau1", "tau2"):
+        assert r.wcrt(name) <= rta[name]["wcrt"] + 1e-9
+
+
+@pytest.mark.parametrize("hname", sorted(ALL_FORMERS))
+def test_random_sets_rta_accept_implies_simulated_missfree(hname):
+    """Monte-Carlo soundness on the event engine: whenever vgang RTA
+    accepts a formed set, the simulated schedule has no deadline miss."""
+    checked = 0
+    for seed in range(8):
+        for util in (0.7, 1.1, 1.5):
+            tasks, intf = random_case(1000 * seed + 7, util=util)
+            vgangs = assign_priorities(ALL_FORMERS[hname](tasks, 4, intf))
+            rta_ok = all(v["ok"]
+                         for v in schedulable_vgangs(vgangs, intf).values())
+            if not rta_ok:
+                continue
+            pol = VirtualGangPolicy(vgangs, 4, intf, auto_prio=False)
+            horizon = 20 * max(t.period for t in tasks)
+            r = pol.simulate(horizon)
+            assert sum(r.deadline_misses.values()) == 0, (hname, seed, util)
+            checked += 1
+    assert checked > 0
+
+
+# ---------------------------------------------------------------------
+# per-member throttle budgets (VirtualGangPolicy.apply)
+# ---------------------------------------------------------------------
+
+def budget_taskset():
+    a = RTTask("a", wcet=2.0, period=20.0, cores=(0,), prio=5,
+               mem_budget=0.2, n_jobs=1)
+    b = RTTask("b", wcet=10.0, period=20.0, cores=(1,), prio=5,
+               mem_budget=1e18, n_jobs=1)
+    be = BETask("be_mem", cores=(2, 3), mem_rate=1.0)
+    return a, b, be
+
+
+def test_per_member_budget_tracks_live_members():
+    """While sensitive member a runs (t in [0,2)) best-effort cores get
+    its 0.2 budget; once a finishes, the surviving member b's huge
+    budget applies immediately. The default leader rule would pin a's
+    budget for the whole gang."""
+    a, b, be = budget_taskset()
+    vg = VirtualGang("ab", [a, b], prio=5)
+    pol = VirtualGangPolicy([vg], 4, auto_prio=False)
+    r = pol.simulate(20.0, be_tasks=[be])
+    # throttled at 0.2/window for 2 windows on 2 cores, free afterwards
+    expect = 2 * (0.2 * 2) + 2 * 8.0 + 2 * 10.0
+    assert r.be_progress["be_mem"] == pytest.approx(expect, abs=0.1)
+    assert r.throttle_events >= 4
+
+    # contrast: default leader-budget rule keeps the first acquirer's
+    # (a's) budget until the lock is fully released
+    a2, b2, be2 = budget_taskset()
+    members = pol.taskset()  # same shape, but rebuild without the policy
+    sim = Simulator(4, [a2, b2], be_tasks=[be2], dt=None)
+    r2 = sim.run(20.0)
+    expect2 = 2 * (0.2 * 10) + 2 * 10.0
+    assert r2.be_progress["be_mem"] == pytest.approx(expect2, abs=0.1)
+    assert r.be_progress["be_mem"] > r2.be_progress["be_mem"] + 10.0
+
+
+def test_policy_budget_floor_is_min_over_members():
+    """With both members alive the enforced budget is the minimum, even
+    when the tolerant member acquired the lock first."""
+    a = RTTask("a", wcet=10.0, period=20.0, cores=(0,), prio=5,
+               mem_budget=1e18, n_jobs=1)     # core 0 acquires first
+    b = RTTask("b", wcet=10.0, period=20.0, cores=(1,), prio=5,
+               mem_budget=0.2, n_jobs=1)
+    be = BETask("be_mem", cores=(2, 3), mem_rate=1.0)
+    vg = VirtualGang("ab", [a, b], prio=5)
+    r = VirtualGangPolicy([vg], 4, auto_prio=False).simulate(
+        20.0, be_tasks=[be])
+    assert r.throttle_events > 0
+    # leader-only rule: leader is a (inf budget) -> no throttling at all
+    r2 = Simulator(4, [dataclasses.replace(a), dataclasses.replace(b)],
+                   be_tasks=[BETask("be_mem", cores=(2, 3), mem_rate=1.0)],
+                   dt=None).run(20.0)
+    assert r2.throttle_events == 0
+
+
+# ---------------------------------------------------------------------
+# SimResult percentiles (satellite: Fig.6 CDFs through the engine)
+# ---------------------------------------------------------------------
+
+def test_simresult_percentiles():
+    rs = [float(i) for i in range(1, 1001)]          # 1..1000
+    r = SimResult(trace=Trace(1), response_times={"t": rs},
+                  deadline_misses={"t": 0}, be_progress={},
+                  throttle_events=0, ipis=0, preemptions=0,
+                  slack_time=0.0, horizon=1.0)
+    assert r.percentile("t", 0) == 1.0
+    assert r.percentile("t", 100) == 1000.0
+    assert r.percentile("t", 50) == pytest.approx(500.5)
+    p = r.percentiles("t")
+    assert p["p999"] == pytest.approx(999.001, abs=0.01)
+    assert p["max"] == 1000.0 and p["n"] == 1000
+    assert r.percentiles("missing")["n"] == 0
+
+
+def test_fig6_sim_mode_percentiles_run():
+    """Fig.6 through the event engine at a 10^4 ms horizon: RT-Gang's
+    CDF is tight and below Co-Sched's tail (the paper's headline)."""
+    import importlib.util
+    import os
+    spec = importlib.util.spec_from_file_location(
+        "fig6", os.path.join(os.path.dirname(__file__), "..",
+                             "benchmarks", "fig6_dnn_cdf.py"))
+    fig6 = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(fig6)
+    rows = fig6.run_sim(horizon_ms=1e4)
+    assert rows["solo"]["p50"] == pytest.approx(7.6)
+    assert rows["rtgang"]["p999"] < rows["cosched"]["p999"]
+    assert rows["rtgang"]["misses"] == 0
+    assert rows["solo"]["n"] >= 580          # ~10^4 / 17 releases
+
+
+# ---------------------------------------------------------------------
+# sweep batching + seeding (satellites), grid smoke
+# ---------------------------------------------------------------------
+
+def test_schedulability_sweep_reproducible_and_batched():
+    kw = dict(n_cores=4, n_tasks=3, utils=(0.5, 0.9), n_per_util=3,
+              cycles=5.0, processes=1, seed=42)
+    a = schedulability_sweep(**kw)
+    b = schedulability_sweep(**kw)
+    for ra, rb in zip(a["rows"], b["rows"]):
+        assert ra["sim_sched_ratio"] == rb["sim_sched_ratio"]
+        assert ra["rta_sched_ratio"] == rb["rta_sched_ratio"]
+        assert ra["events_total"] == rb["events_total"]
+    assert a["seed"] == 42
+    # sharding-independent: more workers, same per-taskset seeds
+    c = schedulability_sweep(**{**kw, "processes": 4})
+    for ra, rc in zip(a["rows"], c["rows"]):
+        assert ra["events_total"] == rc["events_total"]
+        assert ra["sim_sched_ratio"] == rc["sim_sched_ratio"]
+    # the shard workers preserve the per-taskset seed formula
+    cell = _sched_cell(taskset_seed(42, 1, 0.5), 4, 3, 0.5, 5.0)
+    assert cell["util"] == 0.5 and isinstance(cell["sim_ok"], bool)
+
+
+def test_vgang_grid_smoke(tmp_path):
+    out = run_grid(cores=(4,), dists=("mixed",), utils=(0.8, 2.4),
+                   heuristics=("ffd", "intfaware"), n_per_cell=4,
+                   sim_check=1, processes=1, out_dir=str(tmp_path),
+                   seed=3)
+    s = out["summary"]
+    assert s["soundness_violations"] == 0
+    assert (tmp_path / "grid_4c_mixed.json").exists()
+    assert (tmp_path / "summary.json").exists()
+    rows = {r["util"]: r for r in out["results"]}
+    # plain RT-Gang can never accept a single-core-equivalent util > 1
+    assert rows[2.4]["accept"]["rtgang"] == 0.0
+    for h in ("ffd", "intfaware"):
+        assert 0.0 <= rows[0.8]["accept"][h] <= 1.0
+    # the baseline label is accepted (and deduped) in --heuristics
+    out2 = run_grid(cores=(4,), dists=("mixed",), utils=(0.8,),
+                    heuristics=("rtgang", "ffd"), n_per_cell=2,
+                    sim_check=0, processes=1, out_dir=str(tmp_path))
+    assert set(out2["results"][0]["accept"]) == {"rtgang", "ffd"}
+    with pytest.raises(ValueError, match="unknown heuristics"):
+        run_grid(cores=(4,), dists=("mixed",), utils=(0.8,),
+                 heuristics=("nope",), n_per_cell=1, sim_check=0,
+                 processes=1, out_dir=str(tmp_path))
