@@ -2,7 +2,7 @@
 fixed-quantum simulator in sim.py, at O(events) instead of
 O(horizon/dt x cores x jobs) cost.
 
-Design (DESIGN.md §8):
+Design (DESIGN.md §8, §10):
 
 * **Heap event queue.** A single heapq holds job releases, thread
   completions, throttle trips (budget exhaustion) and throttle replenish /
@@ -11,11 +11,14 @@ Design (DESIGN.md §8):
   ``reschedule_cpus`` callback feeds the dirty-core set that the same-
   timestamp scheduling fixed point drains, and ``on_gang_change`` counts
   them.
-* **Closed-form advancement.** Between two consecutive events the set of
-  co-runners — and therefore every thread's interference-adjusted rate —
-  is constant, so remaining work decreases linearly and completion times
-  are solved exactly (``t = now + remaining * slowdown``) instead of being
-  discovered by dt-stepping.
+* **Lazy closed-form advancement.** Between two regime changes a core's
+  occupant, slowdown and traffic rate are constant, so its remaining
+  work decreases linearly and nothing needs stepping: each core carries
+  a ``mat`` watermark and is *materialized* (work subtracted, traffic
+  charged, trace recorded — all in closed form over the whole span)
+  only when its own regime is about to change. A steady-state event
+  therefore touches O(dirty) cores; untouched cores cost nothing, no
+  matter how many cores the machine has.
 * **Active-job pointers.** Each task keeps a deque of released-but-
   unfinished jobs; the head is the active job (O(1)), replacing the
   quantum loop's linear rescan of every completed job.
@@ -23,25 +26,42 @@ Design (DESIGN.md §8):
   (−prio, submission-order, task-uid) entries pushed on job activation;
   stale entries (no pending work on that core) are popped on peek. This
   replaces the per-core O(tasks) scan.
+* **Incremental co-runner sets (MemoryModel, DESIGN.md §10).** The old
+  per-event ``recompute_rates`` rescan of every (core, core) pair is
+  gone: occupancy lives in the shared MemoryModel, updates flow through
+  a ``changed``-core set (scheduling deltas, budget-regime deltas,
+  trip/unstall wakeups), and interference aggregates are memoized per
+  victim name against the occupant-name-set epoch. Only a distinct-
+  name-set change pays one cached-lookup sweep to re-pin completion
+  predictions.
+* **RT-thread bandwidth charging.** Running RT threads charge
+  ``RTTask.traffic_rate`` through the regulator exactly like best-effort
+  work; a tripped RT thread pauses mid-job — removed from occupancy (no
+  traffic, no interference), its completion re-predicted on un-stall at
+  the window boundary. This is what RTG-throttle (vgang/sched.py)
+  drives: sibling members of a virtual gang are capped while the
+  critical member runs unthrottled.
 
 Semantic parity with the quantum engine (asserted by tests/test_events.py
-on the paper's Fig.4 and Fig.5 tasksets): identical GangScheduler state
-machine, identical interference model, and the continuous-time limit of
-the reactive bandwidth regulator (a best-effort core stalls the instant
-its window budget is exhausted — the quantum engine overshoots by at most
-one accounting quantum, which is exactly its O(dt) discretization bias).
-Best-effort candidates sharing a core are modeled as fair fractional
-co-runners (each gets 1/n of the core and generates 1/n of its traffic),
-the dt -> 0 limit of the quantum loop's per-step round-robin.
+and tests/test_memmodel.py on the paper's Fig.4 and Fig.5 tasksets):
+identical GangScheduler state machine, identical MemoryModel, and the
+continuous-time limit of the reactive bandwidth regulator (a core stalls
+the instant its window budget is exhausted — the quantum engine
+overshoots by at most one accounting quantum, which is exactly its O(dt)
+discretization bias). Best-effort candidates sharing a core are modeled
+as fair fractional co-runners (each gets 1/n of the core and generates
+1/n of its traffic) in both engines.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.gang import RTTask, Thread
+from repro.core.memmodel import BE
 
 _EPS_T = 1e-9       # time comparison tolerance (ms)
 _EPS_W = 1e-9       # work comparison tolerance (ms of compute)
@@ -66,13 +86,17 @@ class _TaskState:
 
 
 class EventEngine:
-    """Drives a Simulator's GangScheduler/BandwidthRegulator/Trace to an
-    exact SimResult. Constructed by ``Simulator.run`` when ``dt is None``."""
+    """Drives a Simulator's GangScheduler/BandwidthRegulator/MemoryModel/
+    Trace to an exact SimResult. Constructed by ``Simulator.run`` when
+    ``dt is None``."""
 
     def __init__(self, sim):
         self.sim = sim
         self.events_processed = 0
         self.handoffs = 0
+        self.releases = 0
+        self.phase_wall: Dict[str, float] = {}
+        self._gang_dirty = False
 
     # -----------------------------------------------------------------
     def run(self, horizon: float):
@@ -80,14 +104,21 @@ class EventEngine:
 
         sim = self.sim
         n = sim.n_cores
-        sched, reg, trace = sim.sched, sim.reg, sim.trace
-        interference = sim.interference
+        sched, reg, trace, mm = sim.sched, sim.reg, sim.trace, sim.mm
         tasks = list(sim.rt_tasks)
         order = {t.uid: i for i, t in enumerate(tasks)}
         threads: Dict[Tuple[int, int], Thread] = {
             (t.uid, c): Thread(task=t, core=c, index=i)
             for t in tasks for i, c in enumerate(t.cores)}
         tstate = {t.uid: _TaskState(t) for t in tasks}
+
+        profile = bool(getattr(sim, "profile", False))
+        phase_wall = self.phase_wall
+        if profile:
+            for k in ("fixed_point", "rates", "push_updates", "advance",
+                      "events"):
+                phase_wall[k] = 0.0
+        perf = time.perf_counter
 
         response: Dict[str, List[float]] = {t.name: [] for t in tasks}
         misses = {t.name: 0 for t in tasks}
@@ -96,14 +127,15 @@ class EventEngine:
 
         current: List[Optional[Thread]] = [None] * n
         slow = [1.0] * n                     # interference slowdown per core
-        rt_sig: List[Optional[tuple]] = [None] * n
-        be_cands: List[tuple] = [tuple(b for b in sim.be_tasks
-                                       if c in b.cores) for c in range(n)]
-        be_active: List[tuple] = [()] * n    # unstalled co-running BE tasks
-        be_rate = [0.0] * n                  # aggregate traffic rate
-        be_sig: List[Optional[tuple]] = [None] * n
-        be_epoch = [0] * n
+        mat = [0.0] * n                      # per-core materialized-to time
+        rt_sig: List[Optional[tuple]] = [None] * n   # completion-push sig
+        chg_sig: List[Optional[tuple]] = [None] * n  # charging-push sig
+        core_epoch = [0] * n                 # _EXHAUST validity guard
+        rt_stalled = [False] * n
         stall_label: List[Optional[str]] = [None] * n
+        be_cands, be_names = sim.be_cands, sim.be_names
+        be_rate = sim.be_share_rate
+        mm_epoch = mm.epoch - 1              # force first reconcile sweep
 
         ready: List[list] = [[] for _ in range(n)]
         heap: list = []
@@ -112,7 +144,8 @@ class EventEngine:
         def push(t: float, kind: int, data) -> None:
             heapq.heappush(heap, (t, next(seq), kind, data))
 
-        dirty = set()
+        dirty = set()        # cores needing a scheduling pass
+        changed = set()      # cores whose occupancy/throttle regime moved
 
         def _resched(cores):                 # gang hand-off / preemption IPI
             dirty.update(cores)
@@ -120,7 +153,65 @@ class EventEngine:
 
         def _gang_change(event, leader):
             self.handoffs += 1
+            self._gang_dirty = True
         sched.on_gang_change = _gang_change
+
+        # ---- lazy advancement ---------------------------------------
+        def materialize(c: int, t: float) -> None:
+            """Apply core ``c``'s constant regime over [mat[c], t): work
+            progress, traffic charging and trace, all closed-form. Must
+            run before any regime ingredient of ``c`` changes (occupant,
+            slowdown, stall state, active job)."""
+            nonlocal slack
+            t0 = mat[c]
+            mat[c] = t
+            if t - t0 < 1e-12:
+                return
+            if profile:
+                t_p = perf()
+            th = current[c]
+            if th is not None:
+                j = tstate[th.task.uid].active
+                if j is None:        # drained; idle until rescheduled
+                    trace.record(c, None, t0, t)
+                    slack += t - t0
+                elif rt_stalled[c]:
+                    # paused mid-job: no progress, no traffic
+                    trace.record(c, stall_label[c] or
+                                 "throttled:" + th.task.name, t0, t)
+                else:
+                    if j.start is None:
+                        j.start = t0
+                    j.remaining[c] = max(0.0,
+                                         j.remaining[c] - (t - t0) / slow[c])
+                    r = mm.rates[c]
+                    if r > 0.0:
+                        reg.charge_span(c, r, t0, t)
+                    trace.record(c, th.task.name, t0, t)
+            else:
+                slack += t - t0
+                if mm.kind[c] == BE:
+                    cands = be_cands[c]
+                    k = len(cands)
+                    if k == 1:
+                        be_progress[cands[0].name] += t - t0
+                        trace.record(c, cands[0].name, t0, t)
+                    else:
+                        sub = (t - t0) / k
+                        for i, b in enumerate(cands):
+                            be_progress[b.name] += sub
+                            trace.record(c, b.name, t0 + i * sub,
+                                         t0 + (i + 1) * sub)
+                    r = mm.rates[c]
+                    if r > 0.0:
+                        reg.charge_span(c, r, t0, t)
+                elif be_cands[c]:    # idle-with-candidates == stalled
+                    trace.record(c, stall_label[c] or
+                                 "throttled:" + be_cands[c][0].name, t0, t)
+                else:
+                    trace.record(c, None, t0, t)
+            if profile:
+                phase_wall["advance"] += perf() - t_p
 
         # ---- releases / activation ----------------------------------
         def activate(job) -> None:
@@ -130,6 +221,7 @@ class EventEngine:
                                    (-job.task.prio, order[job.task.uid],
                                     job.task.uid))
                     dirty.add(c)
+                    changed.add(c)   # a continuing thread needs a re-push
 
         def do_release(uid: int) -> None:
             ts = tstate[uid]
@@ -165,7 +257,8 @@ class EventEngine:
             return None
 
         # ---- scheduling fixed point (mirrors sim.py's pass loop) ----
-        def fixed_point() -> None:
+        def fixed_point(now: float) -> set:
+            touched = set()
             for _ in range(4 + len(tasks)):
                 if not dirty:
                     break
@@ -173,144 +266,137 @@ class EventEngine:
                 dirty.clear()
                 for c in todo:
                     prev = current[c]
-                    nxt = ready_thread(c)
-                    current[c] = sched.pick_next_task_rt(c, prev, nxt)
-            if sched.enabled:
+                    picked = sched.pick_next_task_rt(c, prev,
+                                                     ready_thread(c))
+                    if picked is not prev:
+                        materialize(c, now)
+                        current[c] = picked
+                        touched.add(c)
+            if sched.enabled and self._gang_dirty:
+                # sync preempted cores with the glock (only needed when
+                # lock ownership actually moved this round)
                 g = sched.g
                 for c in range(n):
                     if current[c] is not None and \
                             g.gthreads[c] is not current[c]:
+                        materialize(c, now)
                         current[c] = g.gthreads[c]
+                        touched.add(c)
+            return touched
 
-        # ---- best-effort filling + interference rates ---------------
-        def refill(now: float) -> None:
-            for c in range(n):
-                if current[c] is None and be_cands[c] and \
-                        not reg.is_stalled(c, now):
-                    cands = be_cands[c]
-                    be_active[c] = cands
-                    be_rate[c] = sum(b.mem_rate for b in cands) / len(cands)
-                else:
-                    be_active[c] = ()
-                    be_rate[c] = 0.0
+        # ---- occupancy refresh (dirty cores only) -------------------
+        def refresh(cores, now: float) -> None:
+            for c in cores:
+                if mat[c] < now:
+                    materialize(c, now)
+                stalled = mm.refresh_core(c, current[c], be_names[c],
+                                          be_rate[c], now)
+                if stalled and not rt_stalled[c]:
+                    stall_label[c] = "throttled:" + current[c].task.name
+                rt_stalled[c] = stalled
 
-        def recompute_rates() -> None:
-            for c in range(n):
-                th = current[c]
-                if th is None:
-                    continue
-                victim = th.task.name
-                s = 1.0
-                for cc in range(n):
-                    if cc == c:
+        def reconcile(push_set, now: float) -> None:
+            """Re-read slowdown aggregates. If the distinct occupant-name
+            set moved, sweep RT cores against the per-victim memo (cache
+            hits, O(1) each) and re-pin only the cores whose aggregate
+            actually changed; otherwise only the dirty cores can have a
+            new victim."""
+            nonlocal mm_epoch
+            if mm.epoch != mm_epoch:
+                mm_epoch = mm.epoch
+                for c in range(n):
+                    th = current[c]
+                    if th is None or rt_stalled[c]:
                         continue
-                    other = current[cc]
-                    if other is not None:
-                        if other.task.name != victim:
-                            f = interference(victim, other.task.name)
-                            if f > s:
-                                s = f
-                    else:
-                        for b in be_active[cc]:
-                            if b.name != victim:
-                                f = interference(victim, b.name)
-                                if f > s:
-                                    s = f
-                slow[c] = s
+                    s = mm.slowdown(th.task.name)
+                    if s != slow[c]:
+                        materialize(c, now)
+                        slow[c] = s
+                        push_set.add(c)
+            else:
+                for c in tuple(push_set):
+                    th = current[c]
+                    if th is not None and not rt_stalled[c]:
+                        slow[c] = mm.slowdown(th.task.name)
 
-        def push_updates(now: float) -> None:
-            for c in range(n):
+        # ---- event (re)prediction for dirty cores -------------------
+        def push_updates(cores, now: float) -> None:
+            for c in cores:
                 th = current[c]
                 if th is not None:
                     j = tstate[th.task.uid].active
                     if j is None:        # drained; reschedule at next event
                         dirty.add(c)
                         rt_sig[c] = None
-                        be_sig[c] = None
+                        chg_sig[c] = None
                         continue
-                    sig = (th.task.uid, j.index, slow[c])
-                    if rt_sig[c] != sig:
-                        rt_sig[c] = sig
+                    if rt_stalled[c]:
+                        st = reg.cores[c]
+                        s = ("rt-stalled", st.stalled_until)
+                        if chg_sig[c] != s:
+                            chg_sig[c] = s
+                            core_epoch[c] += 1
+                            push(st.stalled_until, _UNSTALL, c)
+                        rt_sig[c] = None     # re-pin completion on resume
+                        continue
+                    s = (th.task.uid, j.index, slow[c])
+                    if rt_sig[c] != s:
+                        rt_sig[c] = s
                         push(now + j.remaining[c] * slow[c], _COMPLETE, c)
-                    be_sig[c] = None
+                    trip = mm.next_trip_time(c, now)
+                    s = ("rt-run", th.task.uid, j.index, mm.rates[c],
+                         reg.cores[c].budget, trip)
+                    if chg_sig[c] != s:
+                        chg_sig[c] = s
+                        core_epoch[c] += 1
+                        if trip != _INF and trip < horizon + _EPS_T:
+                            push(trip, _EXHAUST, (c, core_epoch[c]))
                     continue
                 rt_sig[c] = None
                 st = reg.cores[c]
                 if st.stalled_until > now + _EPS_T:
-                    sig = ("stalled", st.stalled_until)
-                    if be_sig[c] != sig:
-                        be_sig[c] = sig
-                        be_epoch[c] += 1
+                    s = ("stalled", st.stalled_until)
+                    if chg_sig[c] != s:
+                        chg_sig[c] = s
+                        core_epoch[c] += 1
                         push(st.stalled_until, _UNSTALL, c)
-                elif be_active[c] and be_rate[c] > 0.0 and \
+                elif mm.kind[c] == BE and mm.rates[c] > 0.0 and \
                         st.budget != _INF:
-                    trip = reg.next_trip_time(c, be_rate[c], now)
-                    sig = ("running", be_active[c], be_rate[c], st.budget,
-                           trip)
-                    if be_sig[c] != sig:
-                        be_sig[c] = sig
-                        be_epoch[c] += 1
-                        if trip < horizon + _EPS_T and trip != _INF:
-                            push(trip, _EXHAUST, (c, be_epoch[c]))
+                    trip = mm.next_trip_time(c, now)
+                    s = ("be-run", mm.names[c], mm.rates[c], st.budget,
+                         trip)
+                    if chg_sig[c] != s:
+                        chg_sig[c] = s
+                        core_epoch[c] += 1
+                        if trip != _INF and trip < horizon + _EPS_T:
+                            push(trip, _EXHAUST, (c, core_epoch[c]))
                 else:
-                    sig = ("free", be_active[c])
-                    if be_sig[c] != sig:
-                        be_sig[c] = sig
-                        be_epoch[c] += 1
+                    s = ("free", mm.names[c])
+                    if chg_sig[c] != s:
+                        chg_sig[c] = s
+                        core_epoch[c] += 1
 
-        # ---- closed-form interval advancement -----------------------
-        def advance(t0: float, t1: float) -> None:
-            nonlocal slack
-            if t1 - t0 < 1e-12:
-                return
-            span = t1 - t0
-            for c in range(n):
-                th = current[c]
-                if th is not None:
-                    j = tstate[th.task.uid].active
-                    if j is None:        # drained; idle until rescheduled
-                        trace.record(c, None, t0, t1)
-                        slack += span
-                        continue
-                    if j.start is None:
-                        j.start = t0
-                    j.remaining[c] = max(0.0,
-                                         j.remaining[c] - span / slow[c])
-                    trace.record(c, th.task.name, t0, t1)
-                    continue
-                slack += span
-                if be_active[c]:
-                    k = len(be_active[c])
-                    sub = span / k
-                    for i, b in enumerate(be_active[c]):
-                        be_progress[b.name] += sub
-                        trace.record(c, b.name, t0 + i * sub,
-                                     t0 + (i + 1) * sub)
-                    if be_rate[c] > 0.0:
-                        reg.charge_span(c, be_rate[c], t0, t1)
-                elif be_cands[c] and reg.is_stalled(c, t0):
-                    trace.record(c, stall_label[c] or
-                                 "throttled:" + be_cands[c][0].name, t0, t1)
-                else:
-                    trace.record(c, None, t0, t1)
-
-        def detect_completions(now: float) -> None:
-            for c in range(n):
+        def detect_completions(cores, now: float) -> None:
+            for c in sorted(cores):
                 th = current[c]
                 if th is None:
                     continue
+                if mat[c] < now:
+                    materialize(c, now)
                 ts = tstate[th.task.uid]
                 j = ts.active
                 if j is None:
-                    # a sibling core's iteration popped the finished job
+                    # a sibling core's completion popped the finished job
                     # and the queue drained — this core must reschedule
                     dirty.add(c)
+                    changed.add(c)
                     continue
                 r = j.remaining.get(c)
                 if r is None or r > _EPS_W:
-                    continue
+                    continue             # stale prediction: superseded
                 j.remaining[c] = 0.0
                 dirty.add(c)
+                changed.add(c)
                 if j.done and j.finish is None:
                     j.finish = now
                     rt = now - j.release
@@ -321,49 +407,84 @@ class EventEngine:
                     if ts.queue:
                         activate(ts.queue[0])
 
+        def timed(key, t_p, a0):
+            phase_wall[key] += (perf() - t_p) - (phase_wall["advance"] - a0)
+
         # ---- main loop ----------------------------------------------
         now = 0.0
-        fixed_point()
-        refill(now)
-        recompute_rates()
-        push_updates(now)
+        changed.update(range(n))
+        changed.update(sim.apply_budget_rule())
+        refresh(sorted(changed), now)
+        reconcile(changed, now)
+        push_updates(sorted(changed), now)
+        changed.clear()
         while True:
-            t_next = min(heap[0][0], horizon) if heap else horizon
-            advance(now, t_next)
-            now = t_next
-            detect_completions(now)
+            now = min(heap[0][0], horizon) if heap else horizon
+            if profile:
+                t_p, a0 = perf(), phase_wall["advance"]
+            comp = ()
             while heap and heap[0][0] <= now + _EPS_T:
                 _, _, kind, data = heapq.heappop(heap)
                 self.events_processed += 1
-                if now >= horizon - _EPS_T and kind == _RELEASE:
-                    continue             # quantum engine never releases at T
                 if kind == _RELEASE:
+                    if now >= horizon - _EPS_T:
+                        continue         # quantum engine never releases at T
+                    self.releases += 1
                     do_release(data)
+                elif kind == _COMPLETE:
+                    if not comp:
+                        comp = set()
+                    comp.add(data)
                 elif kind == _EXHAUST:
                     c, epoch = data
+                    if epoch != core_epoch[c]:
+                        continue         # superseded prediction
+                    materialize(c, now)
                     st = reg.cores[c]
-                    if epoch == be_epoch[c] and be_rate[c] > 0.0 and \
-                            st.budget != _INF and \
+                    if mm.rates[c] > 0.0 and st.budget != _INF and \
                             st.used >= st.budget - 1e-6:
-                        reg.trip(c, now)
-                        heavy = max(be_active[c] or be_cands[c],
-                                    key=lambda b: b.mem_rate)
-                        stall_label[c] = "throttled:" + heavy.name
-                # _COMPLETE / _UNSTALL: pure wakeups — the state refresh
-                # below observes the zero remaining / lifted stall.
+                        mm.trip(c, now)
+                        th = current[c]
+                        if th is not None:
+                            stall_label[c] = "throttled:" + th.task.name
+                        elif be_cands[c]:
+                            heavy = max(be_cands[c],
+                                        key=lambda b: b.mem_rate)
+                            stall_label[c] = "throttled:" + heavy.name
+                        changed.add(c)
+                else:                    # _UNSTALL: pure wakeup
+                    changed.add(data)
+            if comp:
+                detect_completions(comp, now)
+            if profile:
+                timed("events", t_p, a0)
             if now >= horizon - _EPS_T:
+                for c in range(n):
+                    if mat[c] < horizon:
+                        materialize(c, horizon)
                 break
-            fixed_point()
-            if sched.enabled and sim.budget_policy is not None:
-                sim.budget_policy.apply(sched.g, reg)
-            elif sched.enabled and sched.g.held_flag and \
-                    sched.g.leader is not None:
-                reg.set_gang_budget(sched.g.leader.mem_budget)
-            else:
-                reg.set_gang_budget(None)
-            refill(now)
-            recompute_rates()
-            push_updates(now)
+            if profile:
+                t_p, a0 = perf(), phase_wall["advance"]
+            touched = fixed_point(now)
+            changed.update(touched)
+            if profile:
+                timed("fixed_point", t_p, a0)
+                t_p, a0 = perf(), phase_wall["advance"]
+            if touched or self._gang_dirty:
+                self._gang_dirty = False
+                changed.update(sim.apply_budget_rule())
+            if changed:
+                refresh(sorted(changed), now)
+                reconcile(changed, now)
+                if profile:
+                    timed("rates", t_p, a0)
+                    t_p, a0 = perf(), phase_wall["advance"]
+                push_updates(sorted(changed), now)
+                changed.clear()
+                if profile:
+                    timed("push_updates", t_p, a0)
+            elif profile:
+                timed("rates", t_p, a0)
 
         throttle_events = sum(st.throttle_events
                               for st in reg.cores.values())

@@ -20,6 +20,7 @@ Works with any callables; benchmarks bind jitted JAX functions per lane.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import threading
 import time
@@ -88,6 +89,12 @@ class GangExecutor:
         self._instances: Dict[int, List[_JobInstance]] = {}
         self._tasks: Dict[int, RTTask] = {}
         self._threads: Dict[Tuple[int, int], Thread] = {}
+        # per-lane lazy max-heaps of (-prio, seq, job uid, instance idx),
+        # pushed on release, stale entries popped on peek — the event
+        # engine's ready-queue structure, so fleet-size dispatch over
+        # hundreds of lanes is O(log n) instead of an O(jobs) scan
+        self._ready: List[list] = [[] for _ in range(n_lanes)]
+        self._ready_seq = itertools.count()
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._stop = False
@@ -164,21 +171,24 @@ class GangExecutor:
                 insts.append(_JobInstance(
                     job=job, index=n, release=next_rel,
                     remaining_lanes=set(job.lanes)))
+                seq = next(self._ready_seq)
+                for lane in job.lanes:
+                    heapq.heappush(self._ready[lane],
+                                   (-job.prio, seq, job.uid, n))
 
     def _ready_thread(self, lane: int) -> Optional[Thread]:
-        best = None
-        best_prio = -1
-        for job in self.rt_jobs:
-            if lane not in job.lanes:
+        """Highest-priority released job with work left on this lane —
+        lazy max-heap peek (same-priority ties go to the earlier
+        release). Callers hold self._lock."""
+        h = self._ready[lane]
+        while h:
+            _, _, uid, idx = h[0]
+            inst = self._instances[uid][idx]
+            if lane not in inst.remaining_lanes:
+                heapq.heappop(h)         # quantum retired: stale entry
                 continue
-            inst = next((i for i in self._instances[job.uid]
-                         if lane in i.remaining_lanes), None)
-            if inst is None:
-                continue
-            if job.prio > best_prio:
-                best_prio = job.prio
-                best = self._threads[(job.uid, lane)]
-        return best
+            return self._threads[(uid, lane)]
+        return None
 
     def _active_instance(self, job: RTJob, lane: int) -> Optional[_JobInstance]:
         return next((i for i in self._instances[job.uid]

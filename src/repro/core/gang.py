@@ -45,7 +45,13 @@ class RTTask:
              how aggressive a co-runner it is. Used by the virtual-gang
              formation heuristics (vgang/formation.py) to avoid packing
              two memory-hungry gangs into one virtual gang
-             (arXiv:1912.10959 §V).
+             (arXiv:1912.10959 §V), and — through ``traffic_rate`` — as
+             the traffic each of its threads charges against the
+             bandwidth regulator (RTG-throttle, §IV-C: sibling members
+             of a virtual gang are regulated like best-effort work).
+    mem_rate: explicit per-thread traffic rate (units per ms of
+             execution, the BETask.mem_rate scale); None derives it
+             from mem_intensity.
     """
     name: str
     wcet: float
@@ -54,10 +60,21 @@ class RTTask:
     prio: int
     mem_budget: float = 0.0
     mem_intensity: float = 0.0
+    mem_rate: Optional[float] = None
     release_offset: float = 0.0
     n_jobs: Optional[int] = None          # None = unbounded
     wcet_per_core: Optional[Dict[int, float]] = None
     uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    @property
+    def traffic_rate(self) -> float:
+        """Memory traffic each thread generates per ms it executes —
+        the declared ``mem_rate``, defaulting to ``mem_intensity`` (an
+        intensity-s gang produces s units/ms, the same abstract scale as
+        BETask.mem_rate). Charged through the BandwidthRegulator by the
+        MemoryModel so RT threads can trip per-core budgets."""
+        return self.mem_rate if self.mem_rate is not None \
+            else self.mem_intensity
 
     def thread_wcet(self, core: int) -> float:
         if self.wcet_per_core:

@@ -1,0 +1,173 @@
+"""MemoryModel — the shared interference/bandwidth layer of both
+simulator engines (DESIGN.md §10).
+
+Both engines used to carry their own copy of the co-runner bookkeeping:
+the quantum loop rebuilt a ``running_names`` map and took a max over
+co-runners per core per step, and the event engine's ``recompute_rates``
+rescanned every (core, other-core) pair per event — O(cores^2) at every
+steady-state throttle event. This module replaces both with one
+incrementally-maintained model:
+
+* **Occupancy** — each core holds one occupant record: an RT thread, a
+  fractional set of best-effort candidates, or nothing. Updates are
+  diffed: an unchanged assignment is a no-op, a changed one adjusts the
+  global occupant-name multiset only for that core (O(dirty) per event).
+* **Interference** — the engines' slowdown rule is
+  ``max(1, max_{name present, name != victim} interference(victim, name))``:
+  same-named threads never interfere and a gang's own threads share one
+  name, so the slowdown depends only on the victim's name and the *set*
+  of distinct occupant names — not on which core anyone sits on. The
+  model therefore versions the distinct-name set with an ``epoch``
+  (bumped only on a 0<->1 presence transition) and memoizes slowdowns
+  per victim name against it: a steady-state event where the name set
+  is unchanged reuses every cached aggregate.
+* **Bandwidth charging** — RT threads charge their ``traffic_rate``
+  (RTTask.mem_rate, derived from mem_intensity) through the same
+  ``BandwidthRegulator`` best-effort work uses, so RT threads can trip
+  per-core budgets (RTG-throttle: sibling members of a virtual gang are
+  regulated while the critical member runs unthrottled). A tripped RT
+  thread *pauses mid-job* — the engines stop its progress and remove it
+  from occupancy (a stalled thread generates no traffic and no
+  interference) until the regulation window ends.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.core.gang import RTTask
+from repro.core.throttle import BandwidthRegulator
+
+# occupant kinds
+IDLE, RT, BE = 0, 1, 2
+
+_INF = float("inf")
+
+
+class MemoryModel:
+    """Incremental co-runner sets + slowdown aggregates + traffic
+    charging, driven by both engines (core/sim.py and core/events.py).
+
+    ``kind``/``names``/``rates`` are per-core views the engines read in
+    their hot loops; mutate occupancy only through ``set_rt``/``set_be``
+    /``clear`` so the name multiset and epoch stay consistent.
+    """
+
+    def __init__(self, n_cores: int,
+                 interference: Callable[[str, str], float],
+                 regulator: BandwidthRegulator):
+        self.n_cores = n_cores
+        self.interference = interference
+        self.reg = regulator
+        self.kind: List[int] = [IDLE] * n_cores
+        self.names: List[Tuple[str, ...]] = [()] * n_cores
+        self.rates: List[float] = [0.0] * n_cores
+        self.epoch = 0                       # distinct-name-set version
+        self._count: Dict[str, int] = {}     # occupant-name multiset
+        self._slow: Dict[str, Tuple[int, float]] = {}   # victim -> (epoch, s)
+
+    # ---- occupancy (incremental) ------------------------------------
+    def _assign(self, core: int, kind: int, names: Tuple[str, ...],
+                rate: float) -> None:
+        if self.kind[core] == kind and self.names[core] == names:
+            self.rates[core] = rate
+            return
+        cnt = self._count
+        for nm in self.names[core]:
+            left = cnt[nm] - 1
+            if left:
+                cnt[nm] = left
+            else:
+                del cnt[nm]
+                self.epoch += 1
+        for nm in names:
+            had = cnt.get(nm, 0)
+            cnt[nm] = had + 1
+            if not had:
+                self.epoch += 1
+        self.kind[core] = kind
+        self.names[core] = names
+        self.rates[core] = rate
+
+    def set_rt(self, core: int, task: RTTask) -> None:
+        """An RT thread of ``task`` occupies ``core`` (running, i.e. not
+        throttle-stalled — stalled threads are ``clear``-ed)."""
+        self._assign(core, RT, (task.name,), task.traffic_rate)
+
+    def set_be(self, core: int, names: Tuple[str, ...],
+               rate: float) -> None:
+        """Fractional best-effort co-runners occupy ``core``: every
+        candidate is present for interference purposes and the core
+        charges their aggregate ``rate`` (sum of mem_rate / n)."""
+        self._assign(core, BE, names, rate)
+
+    def clear(self, core: int) -> None:
+        """Core idle (or its occupant is throttle-stalled: a stalled
+        thread generates no traffic and no interference)."""
+        self._assign(core, IDLE, (), 0.0)
+
+    def refresh_core(self, core: int, thread, be_names: Tuple[str, ...],
+                     be_rate: float, now: float) -> bool:
+        """Re-derive ``core``'s occupancy from the engine's scheduling
+        state — the one shared stall policy both engines apply: an RT
+        occupant with traffic whose budget is tripped pauses (cleared:
+        no traffic, no interference) and True is returned; otherwise
+        the RT thread occupies the core. A free core hosts its
+        best-effort candidates fractionally unless stalled."""
+        if thread is not None:
+            if thread.task.traffic_rate > 0.0 and \
+                    self.reg.is_stalled(core, now):
+                self.clear(core)
+                return True
+            self.set_rt(core, thread.task)
+            return False
+        if be_names and not self.reg.is_stalled(core, now):
+            self.set_be(core, be_names, be_rate)
+        else:
+            self.clear(core)
+        return False
+
+    # ---- interference aggregate (epoch-memoized) --------------------
+    def slowdown(self, victim: str) -> float:
+        """max(1, max over present occupant names != victim) — cached
+        against the distinct-name-set epoch, so steady-state events
+        reuse every aggregate and a name-set change costs one
+        O(#distinct names) rebuild per victim, not O(cores^2)."""
+        hit = self._slow.get(victim)
+        if hit is not None and hit[0] == self.epoch:
+            return hit[1]
+        s = 1.0
+        intf = self.interference
+        for nm in self._count:
+            if nm != victim:
+                f = intf(victim, nm)
+                if f > s:
+                    s = f
+        self._slow[victim] = (self.epoch, s)
+        return s
+
+    # ---- bandwidth charging -----------------------------------------
+    # Thin seams over the regulator so both engines charge RT and BE
+    # occupants identically: the dt-stepped loop uses charge_quantum;
+    # the closed-form engine predicts trips via next_trip_time/trip and
+    # span-charges reg.charge_span(core, rates[core], ...) directly in
+    # its materialization hot path.
+
+    def charge_quantum(self, core: int, dt: float, now: float) -> float:
+        """Charge one quantum of the core's occupant traffic; returns
+        the fraction of the quantum that executed (reactive: the
+        traffic is fully accounted, the occupant runs until the exact
+        trip point within the quantum and then stalls until the window
+        ends — the same progress the closed-form engine realizes)."""
+        r = self.rates[core]
+        if r <= 0.0:
+            return 1.0
+        return self.reg.charge_partial(core, r * dt, now)
+
+    def next_trip_time(self, core: int, now: float) -> float:
+        r = self.rates[core]
+        if r <= 0.0 or self.reg.cores[core].budget == _INF:
+            return _INF
+        return self.reg.next_trip_time(core, r, now)
+
+    def trip(self, core: int, now: float) -> None:
+        self.reg.trip(core, now)

@@ -20,6 +20,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gang import BETask, RTTask, Thread, validate_taskset
 from repro.core.glock import GangScheduler
+from repro.core.memmodel import BE, MemoryModel
 from repro.core.throttle import BandwidthRegulator
 from repro.core.tracing import Trace
 
@@ -112,9 +113,15 @@ class Simulator:
         same SimResult, O(events) instead of O(horizon/dt).
 
         ``budget_policy``: optional object with ``apply(glock, regulator)``
-        that sets throttle budgets whenever the gang lock is held, replacing
-        the default leader-budget rule. Virtual gangs use it to enforce the
-        minimum budget over co-running member gangs (vgang/sched.py)."""
+        called whenever scheduling settles to set throttle budgets,
+        replacing the default leader-budget rule. ``apply`` must return
+        the set of cores whose throttle regime it changed (what
+        ``BandwidthRegulator.set_core_budgets`` returns) — the event
+        engine re-predicts trip/stall events only for those cores — or
+        ``None`` to force a conservative all-cores refresh. Virtual
+        gangs use it to enforce the minimum budget over co-running
+        member gangs, and RTG-throttle to cap sibling members
+        (vgang/sched.py)."""
         validate_taskset(rt_tasks)
         self.n_cores = n_cores
         self.rt_tasks = list(rt_tasks)
@@ -125,13 +132,48 @@ class Simulator:
         self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled)
         self.reg = BandwidthRegulator(n_cores, interval=regulation_interval,
                                       mode=throttle_mode)
+        self.mm = MemoryModel(n_cores, interference, self.reg)
         self.trace = Trace(n_cores)
+        self.profile = False        # event engine: record phase breakdown
+        # per-core best-effort fair-share tables, shared by both engines
+        # (candidates, their names, and the aggregate sum(mem_rate)/n
+        # traffic a free core charges — DESIGN.md §8.3)
+        self.be_cands: List[Tuple[BETask, ...]] = [
+            tuple(b for b in self.be_tasks if c in b.cores)
+            for c in range(n_cores)]
+        self.be_names = [tuple(b.name for b in cands)
+                         for cands in self.be_cands]
+        self.be_share_rate = [
+            sum(b.mem_rate for b in cands) / len(cands) if cands else 0.0
+            for cands in self.be_cands]
+
+    def apply_budget_rule(self):
+        """Refresh throttle budgets from the gang-lock state: the
+        ``budget_policy`` when given, else the paper's rule — the
+        leader's declared budget on every core not occupied by the
+        running gang; gang-occupied cores run unthrottled (RT threads
+        charge their own traffic since the MemoryModel refactor, so the
+        default rule must not turn a gang's budget on itself — only an
+        explicit policy such as RTG-throttle regulates RT members).
+        Returns the cores whose throttle regime changed."""
+        g = self.sched.g
+        if self.sched.enabled and self.budget_policy is not None:
+            changed = self.budget_policy.apply(g, self.reg)
+            return changed if changed is not None else \
+                set(range(self.n_cores))
+        if self.sched.enabled and g.held_flag and g.leader is not None:
+            occupied = {th.core for th in g.gthreads if th is not None}
+            return self.reg.set_core_budgets(
+                {c: None for c in occupied}, default=g.leader.mem_budget)
+        return self.reg.set_gang_budget(None)
 
     # -----------------------------------------------------------------
     def run(self, horizon: float) -> SimResult:
         if self.dt is None:
             from repro.core.events import EventEngine
-            return EventEngine(self).run(horizon)
+            eng = EventEngine(self)
+            self.last_engine = eng       # bench_sim.py reads phase_wall
+            return eng.run(horizon)
         dt = self.dt
         nsteps = int(round(horizon / dt))
         jobs: Dict[int, List[Job]] = {t.uid: [] for t in self.rt_tasks}
@@ -141,9 +183,10 @@ class Simulator:
                 threads[(t.uid, c)] = Thread(task=t, core=c, index=i)
 
         current: List[Optional[Thread]] = [None] * self.n_cores
-        cur_job: Dict[int, Job] = {}                 # task uid -> active job
         be_progress = {b.name: 0.0 for b in self.be_tasks}
-        be_rr = 0
+        be_cands, be_names = self.be_cands, self.be_names
+        be_agg = self.be_share_rate
+        mm = self.mm
         response: Dict[str, List[float]] = {t.name: [] for t in self.rt_tasks}
         misses = {t.name: 0 for t in self.rt_tasks}
         slack = 0.0
@@ -203,58 +246,46 @@ class Simulator:
                         self.sched.g.gthreads[c] is not current[c]:
                     current[c] = self.sched.g.gthreads[c]
 
-            # set throttle budget from the running gang
-            if self.sched.enabled:
-                if self.budget_policy is not None:
-                    self.budget_policy.apply(self.sched.g, self.reg)
-                elif self.sched.g.held_flag and \
-                        self.sched.g.leader is not None:
-                    self.reg.set_gang_budget(self.sched.g.leader.mem_budget)
-                else:
-                    self.reg.set_gang_budget(None)
-            else:
-                self.reg.set_gang_budget(None)
+            # set throttle budgets from the running gang / budget policy
+            self.apply_budget_rule()
 
-            # ---- best-effort filling ------------------------------------
-            be_running: Dict[int, BETask] = {}
-            free_cores = [c for c in range(self.n_cores) if current[c] is None]
-            if self.be_tasks and free_cores:
-                for c in free_cores:
-                    cands = [b for b in self.be_tasks if c in b.cores]
-                    if not cands:
-                        continue
-                    b = cands[(be_rr + c) % len(cands)]
-                    if self.reg.is_stalled(c, now):
-                        self.trace.record(c, "throttled:" + b.name, now,
-                                          now + dt)
-                        continue
-                    be_running[c] = b
-                be_rr += 1
-
-            # ---- who is actually running (for interference) -------------
-            running_names = {}
+            # ---- occupancy (MemoryModel): who runs, who is stalled ------
+            # Best-effort candidates share a free core fractionally (the
+            # event engine's fair-sharing semantics, the dt -> 0 limit of
+            # the old per-step round-robin): every unstalled candidate is
+            # present for interference and the core charges the aggregate
+            # traffic sum(mem_rate)/n. RT threads with traffic charge too
+            # and pause mid-job while their core's budget is tripped.
+            rt_stalled = set()
             for c in range(self.n_cores):
-                if current[c] is not None:
-                    running_names[c] = current[c].task.name
-                elif c in be_running:
-                    running_names[c] = be_running[c].name
+                if mm.refresh_core(c, current[c], be_names[c], be_agg[c],
+                                   now):
+                    rt_stalled.add(c)
 
-            # ---- advance RT work -----------------------------------------
+            # ---- advance RT work + best-effort progress ------------------
             for c in range(self.n_cores):
                 th = current[c]
                 if th is None:
-                    if c in be_running:
-                        b = be_running[c]
-                        ok = self.reg.charge(c, b.mem_rate * dt, now)
-                        if ok:
-                            be_progress[b.name] += dt
-                            self.trace.record(c, b.name, now, now + dt)
-                        else:
-                            self.trace.record(c, "throttled:" + b.name, now,
-                                              now + dt)
-                        slack += dt
+                    slack += dt
+                    cands = be_cands[c]
+                    if mm.kind[c] == BE:
+                        frac = mm.charge_quantum(c, dt, now)
+                        run = dt * frac
+                        if frac > 0.0:
+                            sub = run / len(cands)
+                            for i, b in enumerate(cands):
+                                be_progress[b.name] += sub
+                                self.trace.record(c, b.name, now + i * sub,
+                                                  now + (i + 1) * sub)
+                        if frac < 1.0:
+                            heavy = max(cands, key=lambda b: b.mem_rate)
+                            self.trace.record(c, "throttled:" + heavy.name,
+                                              now + run, now + dt)
+                    elif cands:
+                        heavy = max(cands, key=lambda b: b.mem_rate)
+                        self.trace.record(c, "throttled:" + heavy.name,
+                                          now, now + dt)
                     else:
-                        slack += dt
                         self.trace.record(c, None, now, now + dt)
                     continue
                 j = active_job(th.task)
@@ -262,14 +293,24 @@ class Simulator:
                     continue
                 if j.start is None:
                     j.start = now
-                co = {n for cc, n in running_names.items()
-                      if cc != c and n != th.task.name}
-                slow = 1.0
-                for other in co:
-                    slow = max(slow, self.interference(th.task.name, other))
-                rate = 1.0 / slow
-                j.remaining[c] = max(0.0, j.remaining[c] - dt * rate)
-                self.trace.record(c, th.task.name, now, now + dt)
+                if c in rt_stalled:
+                    self.trace.record(c, "throttled:" + th.task.name,
+                                      now, now + dt)
+                    continue
+                frac = mm.charge_quantum(c, dt, now)
+                if frac <= 0.0:
+                    self.trace.record(c, "throttled:" + th.task.name,
+                                      now, now + dt)
+                    continue
+                # budget tripping mid-quantum: the thread pauses mid-job
+                # after the admitted fraction and stays stalled until the
+                # regulation window ends
+                slow = mm.slowdown(th.task.name)
+                j.remaining[c] = max(0.0, j.remaining[c] - dt * frac / slow)
+                self.trace.record(c, th.task.name, now, now + dt * frac)
+                if frac < 1.0:
+                    self.trace.record(c, "throttled:" + th.task.name,
+                                      now + dt * frac, now + dt)
                 if j.done and j.finish is None:
                     j.finish = now + dt
                     response[th.task.name].append(j.response_time())

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Set
 
 
 @dataclasses.dataclass
@@ -49,31 +49,43 @@ class BandwidthRegulator:
             for c in range(n_cores)}
         self._lock = threading.Lock()
 
-    def set_gang_budget(self, budget: Optional[float]) -> None:
+    def set_gang_budget(self, budget: Optional[float]) -> Set[int]:
         """Called on gang-lock acquisition: the new gang's declared budget is
         enforced on every core that runs best-effort work (paper §IV-F).
         A budget increase (e.g. the throttling gang departed) lifts stalls
         from the previous regime; usage within the window is kept."""
-        self.set_core_budgets({}, default=budget)
+        return self.set_core_budgets({}, default=budget)
 
     def set_core_budgets(self, budgets: Dict[int, Optional[float]],
-                         default: Optional[float] = None) -> None:
+                         default: Optional[float] = None) -> Set[int]:
         """Per-core budget assignment (virtual gangs: each member gang
         declares its own tolerable traffic, so the enforced budget can
         differ per core — see vgang/sched.py). Cores absent from
         ``budgets`` get ``default``. Same stall-lift rule as
-        ``set_gang_budget``: a budget increase releases the stall."""
+        ``set_gang_budget``: a budget increase releases the stall.
+
+        Returns the cores whose regime actually changed (budget moved or
+        a stall was lifted) — the event engine folds exactly these into
+        its dirty-core set instead of rescanning every core."""
+        changed: Set[int] = set()
         with self._lock:
             for c, st in self.cores.items():
                 raw = budgets.get(c, default)
                 b = float("inf") if raw is None else float(raw)
-                if b > st.budget:
+                if b == st.budget:
+                    continue
+                if b > st.budget and st.stalled_until > 0.0:
                     st.stalled_until = 0.0
                 st.budget = b
+                changed.add(c)
+        return changed
 
     def _roll_window(self, st: ThrottleState, now: float) -> None:
-        while now >= st.window_start + st.interval:
-            st.window_start += st.interval
+        delta = now - st.window_start
+        if delta >= st.interval:
+            # jump directly to the window containing ``now`` (O(1) even
+            # after a long idle gap; every skipped window resets usage)
+            st.window_start += int(delta / st.interval) * st.interval
             st.used = 0.0
 
     def charge(self, core: int, amount: float, now: float) -> bool:
@@ -82,29 +94,45 @@ class BandwidthRegulator:
         reactive: always charges; returns False (and stalls the core until
         the next interval) if the budget is now exceeded.
         admission: charges only if it fits; returns False if denied.
-        """
+
+        All-or-nothing view of ``charge_partial``: a reactive trip always
+        admits a fraction < 1 (the overflowing amount never fully fit)."""
+        return self.charge_partial(core, amount, now) >= 1.0
+
+    def charge_partial(self, core: int, amount: float, now: float) -> float:
+        """Charge one quantum, admitting a *fraction* of it: the counter
+        accounts the full amount (reactive hardware overshoots by less
+        than one sampling quantum), the core stalls when the budget is
+        exceeded, and the return value is the fraction of the quantum
+        that executed before the trip. This keeps the dt-stepped
+        engine's progress aligned with the closed-form engine, which
+        runs work up to the exact exhaustion instant — without it, a
+        lost tripping quantum per window can tip a completion past a
+        whole stall period. Admission mode stays all-or-nothing."""
         st = self.cores[core]
         self._roll_window(st, now)
         if now < st.stalled_until:
             st.total_denied += amount
-            return False
+            return 0.0
         if self.mode == "admission":
             if st.used + amount > st.budget:
                 st.throttle_events += 1
                 st.total_denied += amount
                 st.stalled_until = st.window_start + st.interval
-                return False
+                return 0.0
             st.used += amount
             st.total_used += amount
-            return True
-        # reactive
+            return 1.0
+        before = st.used
         st.used += amount
         st.total_used += amount
         if st.used > st.budget:
             st.throttle_events += 1
             st.stalled_until = st.window_start + st.interval
-            return False
-        return True
+            if amount <= 0.0:
+                return 0.0
+            return max(0.0, min(1.0, (st.budget - before) / amount))
+        return 1.0
 
     def is_stalled(self, core: int, now: float) -> bool:
         st = self.cores[core]

@@ -7,7 +7,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Segment:
     core: int
     label: Optional[str]          # None = idle; "throttled:<task>" = stalled
@@ -25,11 +25,10 @@ class Trace:
         if t1 - t0 < 1e-12:      # zero-length (event-engine cascade) — skip
             return
         seg = self._open.get(core)
-        if seg is not None and seg.label == label and \
-                abs(seg.t1 - t0) < 1e-9:
-            seg.t1 = t1
-            return
         if seg is not None:
+            if seg.label == label and -1e-9 < seg.t1 - t0 < 1e-9:
+                seg.t1 = t1
+                return
             self.segments.append(seg)
         self._open[core] = Segment(core, label, t0, t1)
 

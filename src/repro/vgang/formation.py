@@ -118,6 +118,37 @@ def intensity_interference(tasks: Sequence[RTTask],
     return f
 
 
+def critical_member(vg: VirtualGang,
+                    interference: PairwiseInterference = no_interference
+                    ) -> RTTask:
+    """RTG-throttle's protected member (arXiv:1912.10959 §IV-C): the
+    member whose interference-inflated solo term C_i * max_j intf(i, j)
+    bounds the virtual gang's WCET — the bottleneck whose timing the
+    sibling regulation protects. Ties break by name (deterministic
+    across the policy, the RTA and the evaluation grid)."""
+    def key(m: RTTask):
+        slow = 1.0
+        for o in vg.members:
+            if o is not m:
+                slow = max(slow, interference(m.name, o.name))
+        return (-gang_wcet(m) * slow, m.name)
+    return min(vg.members, key=key)
+
+
+def rtg_sibling_budget(vg: VirtualGang,
+                       interference: PairwiseInterference = no_interference,
+                       interval: float = 1.0) -> float:
+    """Per-core traffic budget RTG-throttle enforces on the critical
+    member's sibling members (and best-effort fillers): the critical
+    member's declared tolerable traffic when it has one, else its
+    bandwidth headroom — a critical member of intensity s leaves
+    (1 - s) * interval units per regulation window for everyone else."""
+    crit = critical_member(vg, interference)
+    if crit.mem_budget > 0.0:
+        return crit.mem_budget
+    return max(0.0, 1.0 - crit.mem_intensity) * interval
+
+
 def singleton_vgangs(tasks: Sequence[RTTask]) -> List[VirtualGang]:
     """The degenerate formation: every real gang is its own virtual gang.
     This *is* plain RT-Gang — vgang RTA on it must reproduce core/rta.py

@@ -10,8 +10,15 @@ Grid axes:
 * total gang utilization level (the single-core-equivalent sum C_i/P_i
   — note plain RT-Gang can never accept a set above 1.0, while packed
   virtual gangs can, which is the entire point of the follow-up paper);
-* formation heuristic: ``rtgang`` (singletons = the baseline policy),
-  ``ffd``, ``bestfit``, ``intfaware`` (formation.py).
+* policy: ``rtgang`` (singletons = the baseline), the formation
+  heuristics ``ffd``, ``bestfit``, ``intfaware`` (formation.py), and
+  ``rtgT`` — RTG-throttle (arXiv:1912.10959 §IV-C): interference-aware
+  formation dispatched with per-member bandwidth regulation (critical
+  member unthrottled, siblings capped; sched.py) and priced by the
+  duty-cycle RTA bound (rta.accepts_rtg_throttle). Its curve shows the
+  cost of intra-gang isolation: it trails ``intfaware`` where sibling
+  stalls stretch the gang, and protects the critical member's WCET in
+  exchange.
 
 Per (M, dist, util) cell — one batched worker process per cell, like the
 per-level batching of launch/sweep.py --schedulability — n random
@@ -47,8 +54,14 @@ from repro.launch.sweep import ROOT, taskset_seed, uunifast
 from repro.vgang.formation import (HEURISTICS, assign_priorities,
                                    intensity_interference, singleton_vgangs,
                                    total_vgang_utilization)
-from repro.vgang.rta import accepts
+from repro.vgang.rta import accepts, accepts_rtg_throttle
 from repro.vgang.sched import VirtualGangPolicy
+
+# RTG-throttle policy column: interference-aware formation dispatched
+# with per-member regulation (VirtualGangPolicy(rtg_throttle=True)) and
+# priced by the per-window duty-cycle RTA (rta.accepts_rtg_throttle) —
+# not a formation heuristic, so it is handled apart from HEURISTICS
+RTG_COLUMN = "rtgT"
 
 OUT_DEFAULT = os.path.join(ROOT, "results", "vgang")
 
@@ -99,13 +112,14 @@ def n_tasks_for(n_cores: int) -> int:
 
 
 def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
-                           int, float, float]) -> Dict:
+                           bool, int, float, float]) -> Dict:
     """Pool worker: one (cores, dist, util) cell — all n tasksets, all
     heuristics, in one process (batched, as in sweep._sched_level)."""
-    (seed, n_cores, dist, util, n_sets, heuristics, sim_check, gamma,
+    (seed, n_cores, dist, util, n_sets, heuristics, rtg, sim_check, gamma,
      cycles) = args
-    accept = {h: 0 for h in ("rtgang", *heuristics)}
-    sim_accept = {h: 0 for h in ("rtgang", *heuristics)}
+    columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ())
+    accept = {h: 0 for h in columns}
+    sim_accept = {h: 0 for h in columns}
     sim_n = 0
     soundness_violations = 0
     util_gain = 0.0
@@ -121,6 +135,9 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         check_sim = k < sim_check
         if check_sim:
             sim_n += 1
+        if rtg:
+            formed[RTG_COLUMN] = formed.get("intfaware") or \
+                HEURISTICS["intfaware"](tasks, n_cores, intf)
         base_util = total_vgang_utilization(formed["rtgang"], intf)
         best_util = min(total_vgang_utilization(formed[h], intf)
                         for h in formed)
@@ -129,12 +146,16 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
             vgangs = assign_priorities(vgangs)
             # one-gang-at-a-time: only same-vgang members ever co-run, so
             # intf only enters through each vgang's inflated WCET (and
-            # inflates nothing for the rtgang singleton baseline)
-            rta_ok = accepts(vgangs, intf)
+            # inflates nothing for the rtgang singleton baseline); the
+            # rtgT column prices sibling regulation on top of that
+            is_rtg = h == RTG_COLUMN
+            rta_ok = accepts_rtg_throttle(vgangs, intf) if is_rtg \
+                else accepts(vgangs, intf)
             accept[h] += rta_ok
             if check_sim:
                 policy = VirtualGangPolicy(vgangs, n_cores, intf,
-                                           auto_prio=False)
+                                           auto_prio=False,
+                                           rtg_throttle=is_rtg)
                 horizon = cycles * max(t.period for t in tasks)
                 r = policy.simulate(horizon)
                 sim_ok = sum(r.deadline_misses.values()) == 0
@@ -157,7 +178,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              dists: Sequence[str] = ("light", "mixed", "heavy"),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
                                        1.6, 2.0),
-             heuristics: Sequence[str] = ("ffd", "bestfit", "intfaware"),
+             heuristics: Sequence[str] = ("ffd", "bestfit", "intfaware",
+                                          RTG_COLUMN),
              n_per_cell: int = 50, sim_check: int = 2, gamma: float = 0.5,
              cycles: float = 20.0, seed: int = 0,
              processes: Optional[int] = None,
@@ -166,14 +188,17 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
     cell; aggregate and write per-(cores, dist) curve files + summary."""
     # the singleton baseline is always evaluated under its curve label
     # "rtgang"; accept (and drop) it here so `--heuristics rtgang,ffd`
-    # means what it reads as
-    heuristics = tuple(h for h in heuristics if h != "rtgang")
+    # means what it reads as; "rtgT" selects the RTG-throttle policy
+    # column (interference-aware formation + member regulation)
+    rtg = RTG_COLUMN in heuristics
+    heuristics = tuple(h for h in heuristics
+                       if h not in ("rtgang", RTG_COLUMN))
     unknown = [h for h in heuristics if h not in HEURISTICS]
     if unknown:
-        raise ValueError(f"unknown heuristics {unknown}; "
-                         f"known: rtgang, {', '.join(sorted(HEURISTICS))}")
-    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), sim_check,
-              gamma, cycles)
+        raise ValueError(f"unknown heuristics {unknown}; known: rtgang, "
+                         f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}")
+    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), rtg,
+              sim_check, gamma, cycles)
              for m in cores for d in dists for u in utils]
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
     procs = max(1, min(procs, len(cells)))
@@ -186,7 +211,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
 
     summary = {"seed": seed, "gamma": gamma, "cycles": cycles,
                "n_per_cell": n_per_cell, "sim_check": sim_check,
-               "heuristics": ["rtgang", *heuristics],
+               "heuristics": ["rtgang", *heuristics] +
+                             ([RTG_COLUMN] if rtg else []),
                "utils": list(utils),
                "soundness_violations": sum(r["soundness_violations"]
                                            for r in results),
@@ -231,7 +257,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--cores", default="4,8,16")
     ap.add_argument("--dists", default="light,mixed,heavy")
     ap.add_argument("--utils", default="0.4,0.7,0.9,1.0,1.1,1.2,1.4,1.6,2.0")
-    ap.add_argument("--heuristics", default="ffd,bestfit,intfaware")
+    ap.add_argument("--heuristics", default="ffd,bestfit,intfaware,rtgT")
     ap.add_argument("--n", type=int, default=50)
     ap.add_argument("--sim-check", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.5)
@@ -243,7 +269,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.smoke:
         args.cores, args.dists = "4", "mixed"
-        args.utils, args.heuristics = "0.8,1.6", "ffd,intfaware"
+        args.utils, args.heuristics = "0.8,1.6", "ffd,intfaware,rtgT"
         args.n, args.sim_check = 10, 1
 
     out = run_grid(

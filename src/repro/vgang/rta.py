@@ -21,8 +21,10 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.gang import RTTask
 from repro.core import rta as core_rta
+from repro.core.rta import gang_wcet
 from repro.core.sim import PairwiseInterference, no_interference
-from repro.vgang.formation import VirtualGang
+from repro.vgang.formation import (VirtualGang, critical_member,
+                                   rtg_sibling_budget)
 
 
 def vgang_equivalent_task(
@@ -83,4 +85,162 @@ def accepts(vgangs: Sequence[VirtualGang],
     """Single-bit admission verdict for the evaluation grid."""
     res = schedulable_vgangs(vgangs, interference, blocking=blocking,
                              crpd=crpd)
+    return all(v["ok"] for v in res.values())
+
+
+# ---------------------------------------------------------------------
+# RTG-throttle (arXiv:1912.10959 §IV-C): within a virtual gang the
+# critical member runs unthrottled while sibling members' cores are
+# bandwidth-capped (VirtualGangPolicy(rtg_throttle=True)). The engines
+# realize this through RT-thread charging: a sibling runs from each
+# regulation-window boundary until its per-core budget Q is exhausted
+# (q_j = Q / traffic_rate_j wall-ms), then pauses — generating neither
+# traffic nor interference — until the window ends. The per-window WCET
+# bound below prices exactly that duty-cycle regime.
+# ---------------------------------------------------------------------
+
+def _window_runtimes(vg: VirtualGang, interference: PairwiseInterference,
+                     interval: float) -> Dict[str, float]:
+    """Unstalled run time per regulation window for every member: the
+    critical member owns the whole window; a sibling with traffic rate
+    r runs min(interval, Q / r)."""
+    crit = critical_member(vg, interference)
+    budget = rtg_sibling_budget(vg, interference, interval)
+    run = {}
+    for m in vg.members:
+        r = m.traffic_rate
+        if m is crit or r <= 0.0 or r * interval <= budget + 1e-12:
+            run[m.name] = interval
+        elif budget <= 0.0:
+            run[m.name] = 0.0
+        else:
+            run[m.name] = budget / r
+    return run
+
+
+def rtg_throttle_wcet(vg: VirtualGang,
+                      interference: PairwiseInterference = no_interference,
+                      interval: float = 1.0) -> float:
+    """Stand-alone completion bound of a virtual gang under RTG-throttle
+    (inf = a starved sibling can never finish).
+
+    Per window, member m is unstalled over [0, q_m); its slowdown at
+    offset t is the worst pairwise factor over co-members still
+    unstalled at t (a stalled co-member is absent from the engines'
+    MemoryModel occupancy), so its work per window is the piecewise
+    integral of 1/s(t) over [0, q_m). Co-members are conservatively
+    assumed present in every window (finishing early only removes
+    interference), and the finish offset inside the last window follows
+    the same piecewise profile. Sound against the engines for
+    window-aligned releases (period a multiple of ``interval``, zero
+    offset — the evaluation grid's regime); mid-window resumes after a
+    preemption are priced separately by the per-preemption window slop
+    in ``schedulable_rtg_throttle``."""
+    if len(vg.members) == 1:
+        return vg.inflated_wcet(interference)
+    run = _window_runtimes(vg, interference, interval)
+    worst = 0.0
+    for m in vg.members:
+        q_m = run[m.name]
+        if q_m <= 0.0:
+            return float("inf")
+        # piecewise slowdown profile of m within one window
+        cuts = sorted({min(run[o.name], q_m) for o in vg.members
+                       if o is not m} | {q_m})
+        profile = []                      # [(seg_len, slowdown)]
+        t_prev = 0.0
+        for b in cuts:
+            if b <= t_prev + 1e-15:
+                continue
+            s = 1.0
+            for o in vg.members:
+                if o is not m and run[o.name] > t_prev + 1e-15:
+                    f = interference(m.name, o.name)
+                    if f > s:
+                        s = f
+            profile.append((b - t_prev, s))
+            t_prev = b
+        work_per_window = sum(d / s for d, s in profile)
+        if work_per_window <= 1e-12:
+            return float("inf")
+        need = gang_wcet(m)
+        full = int((need - 1e-12) / work_per_window)
+        rem = need - full * work_per_window
+        offset = 0.0
+        for d, s in profile:              # finish offset in last window
+            seg_work = d / s
+            if rem <= seg_work + 1e-15:
+                offset += rem * s
+                break
+            rem -= seg_work
+            offset += d
+        worst = max(worst, full * interval + offset)
+    return worst
+
+
+def _stall_prone(vg: VirtualGang, interference: PairwiseInterference,
+                 interval: float) -> bool:
+    run = _window_runtimes(vg, interference, interval)
+    return any(q < interval - 1e-12 for q in run.values())
+
+
+def schedulable_rtg_throttle(
+        vgangs: Sequence[VirtualGang],
+        interference: PairwiseInterference = no_interference,
+        interval: float = 1.0, blocking: float = 0.0) -> Dict[str, Dict]:
+    """Per-vgang response times under RTG-throttle dispatch: the RT-Gang
+    single-core transform with ``rtg_throttle_wcet`` standing in for the
+    inflated WCET. Preemptions realign members to mid-window resumes
+    where a stalled sibling may find its budget already spent, wasting
+    up to one regulation window per resume; every release of a
+    higher-priority vgang causes at most one preemption machine-wide,
+    so a per-hp-job ``crpd = interval`` (plus one initial window on the
+    analyzed gang) prices all realignment waste. Vgangs no member of
+    which can ever stall skip that surcharge."""
+    prios = [vg.prio for vg in vgangs]
+    if len(set(prios)) != len(prios):
+        raise ValueError(
+            "virtual gangs must carry distinct priorities before RTA — "
+            "run formation output through formation.assign_priorities()")
+    for vg in vgangs:
+        # the duty-cycle bound is only sound in the window-aligned
+        # regime (see rtg_throttle_wcet): refuse to price anything else
+        ratio = vg.period / interval
+        if abs(ratio - round(ratio)) > 1e-9:
+            raise ValueError(
+                f"RTG-throttle RTA needs window-aligned releases: vgang "
+                f"{vg.name!r} period {vg.period} is not a multiple of "
+                f"the regulation interval {interval}")
+        off = [m.release_offset for m in vg.members
+               if m.release_offset != 0.0]
+        if off:
+            raise ValueError(
+                f"RTG-throttle RTA needs zero release offsets: vgang "
+                f"{vg.name!r} members carry offsets {off}")
+    eq = [RTTask(name=vg.name,
+                 wcet=rtg_throttle_wcet(vg, interference, interval),
+                 period=vg.period, cores=tuple(range(max(1, vg.width))),
+                 prio=vg.prio, mem_budget=vg.mem_budget)
+          for vg in vgangs]
+    out = {}
+    for vg, task in zip(vgangs, eq):
+        if task.wcet == float("inf"):
+            out[vg.name] = {"wcrt": None, "deadline": vg.period,
+                            "ok": False}
+            continue
+        crpd = interval if _stall_prone(vg, interference, interval) \
+            else 0.0
+        R = core_rta.response_time(task, eq, blocking=blocking, crpd=crpd)
+        out[vg.name] = {"wcrt": R, "deadline": vg.period,
+                        "ok": R is not None and R <= vg.period + 1e-12}
+    return out
+
+
+def accepts_rtg_throttle(
+        vgangs: Sequence[VirtualGang],
+        interference: PairwiseInterference = no_interference,
+        interval: float = 1.0, blocking: float = 0.0) -> bool:
+    """Single-bit RTG-throttle admission verdict for the grid."""
+    res = schedulable_rtg_throttle(vgangs, interference,
+                                   interval=interval, blocking=blocking)
     return all(v["ok"] for v in res.values())

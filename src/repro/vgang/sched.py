@@ -25,7 +25,8 @@ from typing import Dict, List, Optional, Sequence
 from repro.core.gang import BETask, RTTask
 from repro.core.sim import (PairwiseInterference, SimResult, Simulator,
                             no_interference)
-from repro.vgang.formation import VirtualGang, assign_priorities
+from repro.vgang.formation import (VirtualGang, assign_priorities,
+                                   critical_member, rtg_sibling_budget)
 from repro.vgang.rta import schedulable_vgangs
 
 
@@ -34,17 +35,30 @@ class VirtualGangPolicy:
 
     ``vgangs`` need distinct priorities; pass ``auto_prio=True`` (default)
     to (re)assign rate-monotonic priorities via formation.assign_priorities.
+
+    ``rtg_throttle=True`` enables RTG-throttle (arXiv:1912.10959 §IV-C):
+    while a virtual gang runs, its *critical* member (formation.
+    critical_member — the interference-inflated bottleneck) executes
+    unthrottled, and every sibling member's cores are capped at the
+    critical member's tolerable traffic (formation.rtg_sibling_budget).
+    Sibling RT threads charge their ``traffic_rate`` against that cap
+    through the engines' MemoryModel and pause mid-job when they trip;
+    once the critical member finishes its job, the surviving members run
+    unthrottled (the protection target is gone). vgang/rta.py prices
+    this regime with a per-window duty-cycle WCET bound
+    (``rtg_throttle_wcet``).
     """
 
     def __init__(self, vgangs: Sequence[VirtualGang], n_cores: int,
                  interference: PairwiseInterference = no_interference,
-                 auto_prio: bool = True):
+                 auto_prio: bool = True, rtg_throttle: bool = False):
         prios = [vg.prio for vg in vgangs]
         if auto_prio and len(set(prios)) != len(prios):
             vgangs = assign_priorities(vgangs)
         self.vgangs: List[VirtualGang] = list(vgangs)
         self.n_cores = n_cores
         self.interference = interference
+        self.rtg_throttle = rtg_throttle
         for vg in self.vgangs:
             if vg.width > n_cores:
                 raise ValueError(f"virtual gang {vg.name!r} needs "
@@ -55,6 +69,11 @@ class VirtualGangPolicy:
             raise ValueError("virtual gangs must have distinct priorities")
         self._members: List[RTTask] = []
         self._budget: Dict[int, float] = {}       # member uid -> budget
+        self._critical: Dict[int, int] = {}       # vgang prio -> member uid
+        self._sibling_budget: Dict[int, float] = {}    # vgang prio -> cap
+        for vg in self.vgangs:
+            self._critical[vg.prio] = critical_member(
+                vg, self.interference).uid
         for vg in self.vgangs:
             cursor = 0
             for m in vg.members:
@@ -78,23 +97,41 @@ class VirtualGangPolicy:
         return list(self._members)
 
     # ---- BudgetPolicy interface (Simulator.budget_policy) ---------------
-    def apply(self, g, reg) -> None:
+    def apply(self, g, reg):
         """Set throttle budgets from the running virtual gang's live
-        members (called by both engines whenever scheduling settles)."""
+        members (called by both engines whenever scheduling settles).
+        Returns the cores whose throttle regime changed (the event
+        engine folds them into its dirty-core set)."""
         if not g.held_flag or g.leader is None:
-            reg.set_gang_budget(None)
-            return
+            return reg.set_gang_budget(None)
         vg = self._by_prio.get(g.leader.prio)
         if vg is None:                   # foreign gang: default rule
-            reg.set_gang_budget(g.leader.mem_budget)
-            return
+            occupied = {th.core for th in g.gthreads if th is not None}
+            return reg.set_core_budgets({c: None for c in occupied},
+                                        default=g.leader.mem_budget)
         live_uids = {th.task.uid for th in g.gthreads if th is not None}
         budgets = [self._budget[u] for u in live_uids if u in self._budget]
         if not budgets:                  # hand-off instant: whole gang
             budgets = [m.mem_budget for m in vg.members]
         floor = min(budgets)
         occupied = {th.core for th in g.gthreads if th is not None}
-        reg.set_core_budgets({c: None for c in occupied}, default=floor)
+        crit_uid = self._critical.get(vg.prio)
+        if self.rtg_throttle and crit_uid in live_uids:
+            # RTG-throttle: the critical member runs unthrottled, every
+            # other live member's cores (and the best-effort fillers)
+            # are capped at the critical member's tolerable traffic
+            cap = self._sibling_budget.get(vg.prio)
+            if cap is None:
+                cap = rtg_sibling_budget(vg, self.interference,
+                                         reg.interval)
+                self._sibling_budget[vg.prio] = cap
+            per_core = {th.core: (None if th.task.uid == crit_uid
+                                  else cap)
+                        for th in g.gthreads if th is not None}
+            return reg.set_core_budgets(per_core,
+                                        default=min(floor, cap))
+        return reg.set_core_budgets({c: None for c in occupied},
+                                    default=floor)
 
     # ---- drivers --------------------------------------------------------
     def build_simulator(self, be_tasks: Sequence[BETask] = (),

@@ -145,6 +145,11 @@ def test_fig4_equivalence(enabled):
         assert abs(q.wcrt(name) - e.wcrt(name)) <= DT_DEFAULT + 1e-9
     assert q.deadline_misses == e.deadline_misses
     assert q.slack_time == pytest.approx(e.slack_time, abs=4 * DT_DEFAULT)
+    # best-effort progress parity: both engines share the fractional
+    # fair-sharing model, so unthrottled progress matches exactly
+    for b in q.be_progress:
+        assert q.be_progress[b] == pytest.approx(e.be_progress[b],
+                                                 abs=4 * DT_DEFAULT), b
 
 
 @pytest.mark.parametrize("enabled", [False, True])
@@ -166,6 +171,12 @@ def test_fig5_equivalence(enabled):
         for rq, re_ in zip(q.response_times[name], e.response_times[name]):
             assert abs(rq - re_) <= 2 * DT_DEFAULT + 1e-9, name
     assert q.deadline_misses == e.deadline_misses
+    assert q.throttle_events == e.throttle_events
+    # be_progress parity within the quantum engine's reactive-throttle
+    # discretization bias: O(dt) per 1 ms regulation window
+    for b in q.be_progress:
+        assert q.be_progress[b] == pytest.approx(
+            e.be_progress[b], abs=120.0 * 0.025 + 1e-6), b
 
 
 def test_event_count_is_small():

@@ -1,0 +1,250 @@
+"""MemoryModel layer (core/memmodel.py, DESIGN.md §10): incremental
+co-runner maintenance, RT-thread bandwidth charging in both engines, and
+RTG-throttle stall semantics (critical member protected, siblings paused
+mid-job)."""
+import math
+
+import pytest
+
+from repro.core.gang import BETask, RTTask
+from repro.core.memmodel import BE, IDLE, RT, MemoryModel
+from repro.core.sim import Simulator, matrix_interference
+from repro.core.throttle import BandwidthRegulator
+from repro.vgang.formation import (VirtualGang, critical_member,
+                                   rtg_sibling_budget)
+from repro.vgang.rta import rtg_throttle_wcet
+from repro.vgang.sched import VirtualGangPolicy
+
+DT = 0.0125
+
+
+# ---------------------------------------------------------------------
+# incremental maintenance invariants
+# ---------------------------------------------------------------------
+
+def _mk(name, core=0):
+    return RTTask(name, wcet=1.0, period=10.0, cores=(core,), prio=1)
+
+
+def test_memmodel_epoch_moves_only_on_presence_transitions():
+    """The distinct-name-set epoch — the slowdown cache key — bumps
+    exactly on 0<->1 presence transitions, so steady-state occupancy
+    churn (a name present elsewhere) keeps every cached aggregate."""
+    intf = matrix_interference({("a", "b"): 2.0, ("a", "c"): 3.0})
+    mm = MemoryModel(4, intf, BandwidthRegulator(4))
+    mm.set_rt(0, _mk("a"))
+    mm.set_rt(1, _mk("b", 1))
+    assert mm.slowdown("a") == 2.0
+    e = mm.epoch
+    mm.set_be(2, ("b",), 0.5)        # b now on two cores: no transition
+    assert mm.epoch == e
+    assert mm.slowdown("a") == 2.0
+    mm.clear(1)                      # b still present via core 2
+    assert mm.epoch == e
+    assert mm.slowdown("a") == 2.0
+    mm.clear(2)                      # b 1 -> 0: transition
+    assert mm.epoch != e
+    assert mm.slowdown("a") == 1.0
+    mm.set_be(3, ("c",), 1.0)
+    assert mm.slowdown("a") == 3.0
+    assert mm.slowdown("b") == 1.0   # no (b, c) entry
+    assert mm.slowdown("c") == 1.0   # own name never interferes
+
+
+def test_memmodel_reassign_same_occupant_is_noop():
+    mm = MemoryModel(2, lambda v, a: 1.0, BandwidthRegulator(2))
+    t = _mk("a")
+    mm.set_rt(0, t)
+    e = mm.epoch
+    mm.set_rt(0, t)
+    assert mm.epoch == e
+    assert mm.kind[0] == RT and mm.names[0] == ("a",)
+    mm.clear(0)
+    assert mm.kind[0] == IDLE and mm.names[0] == ()
+
+
+def test_memmodel_be_fractional_rate():
+    mm = MemoryModel(1, lambda v, a: 1.0, BandwidthRegulator(1))
+    mm.set_be(0, ("x", "y"), 0.75)
+    assert mm.kind[0] == BE
+    assert mm.rates[0] == 0.75
+    assert mm.next_trip_time(0, 0.0) == float("inf")   # budget inf
+
+
+def test_memmodel_slowdown_matches_bruteforce():
+    """The epoch-memoized aggregate equals a from-scratch max over the
+    present occupant names after any update sequence."""
+    table = {("a", "b"): 2.0, ("b", "a"): 1.5, ("a", "c"): 4.0,
+             ("c", "b"): 2.5}
+    intf = matrix_interference(table)
+    mm = MemoryModel(3, intf, BandwidthRegulator(3))
+    seq = [("rt", 0, "a"), ("be", 1, ("b", "c")), ("clear", 0, None),
+           ("rt", 0, "b"), ("clear", 1, None), ("be", 2, ("a",)),
+           ("rt", 1, "c"), ("clear", 2, None)]
+    for op, core, arg in seq:
+        if op == "rt":
+            mm.set_rt(core, _mk(arg, core))
+        elif op == "be":
+            mm.set_be(core, arg, 0.0)
+        else:
+            mm.clear(core)
+        present = {nm for names in mm.names for nm in names}
+        for victim in ("a", "b", "c", "zz"):
+            want = max([1.0] + [intf(victim, nm) for nm in present
+                                if nm != victim])
+            assert mm.slowdown(victim) == want, (op, core, victim)
+
+
+# ---------------------------------------------------------------------
+# RT-thread charging: quantum-vs-event equivalence (the ISSUE's
+# acceptance criterion — Fig.4/Fig.5 tasksets with charging enabled)
+# ---------------------------------------------------------------------
+
+class CapPolicy:
+    """Budget policy capping every core — including RT-occupied ones —
+    so RT threads trip budgets (what RTG-throttle does selectively)."""
+
+    def __init__(self, budget):
+        self.budget = budget
+
+    def apply(self, g, reg):
+        return reg.set_gang_budget(self.budget)
+
+
+def fig4_charged(dt):
+    t1 = RTTask("tau1", wcet=2.0, period=10, cores=(0, 1), prio=2,
+                mem_intensity=0.8)
+    t2 = RTTask("tau2", wcet=4.0, period=10, cores=(2, 3), prio=1,
+                mem_intensity=0.3)
+    be = [BETask("tau3", cores=(0, 1, 2, 3), mem_rate=1.0)]
+    intf = matrix_interference({("tau1", "tau2"): 1.5,
+                                ("tau2", "tau1"): 1.2})
+    return Simulator(4, [t1, t2], be_tasks=be, interference=intf,
+                     rt_gang_enabled=True, dt=dt,
+                     budget_policy=CapPolicy(0.4))
+
+
+def fig5_charged(dt):
+    t1 = RTTask("tau1", wcet=3.5, period=20, cores=(0, 1), prio=2,
+                mem_budget=0.1, mem_intensity=0.6)
+    t2 = RTTask("tau2", wcet=6.5, period=30, cores=(2, 3), prio=1,
+                mem_budget=0.1, mem_intensity=0.2)
+    bem = BETask("be_mem", cores=(0, 1, 2, 3), mem_rate=1.0)
+    bec = BETask("be_cpu", cores=(0, 1, 2, 3), mem_rate=0.01)
+    intf = matrix_interference({
+        ("tau1", "tau2"): 2.0, ("tau2", "tau1"): 2.0,
+        ("tau1", "be_mem"): 1.5, ("tau2", "be_mem"): 1.5,
+    })
+    return Simulator(4, [t1, t2], be_tasks=[bem, bec], interference=intf,
+                     rt_gang_enabled=True, dt=dt,
+                     throttle_mode="reactive",
+                     budget_policy=CapPolicy(0.5))
+
+
+def test_fig4_rt_charging_exact_stall_pattern():
+    """Single-gang arithmetic: tau1 (rate 0.8, cap 0.4) runs 0.5 ms per
+    1 ms window then pauses mid-job — 2 ms of work completes at 3.5."""
+    r = fig4_charged(None).run(10.0)
+    assert r.response_times["tau1"][0] == pytest.approx(3.5)
+    assert r.throttle_events > 0
+
+
+@pytest.mark.parametrize("builder", [fig4_charged, fig5_charged])
+def test_rt_charging_equivalence(builder):
+    """Quantum and event engines agree — response times, misses,
+    throttle trips and best-effort progress — with RT-thread charging
+    enabled (dt-bias tolerance; the fractional quantum admission keeps
+    per-window progress aligned, so the residual gap is O(dt))."""
+    horizon = 60.0
+    q = builder(DT).run(horizon)
+    e = builder(None).run(horizon)
+    assert q.engine == "quantum" and e.engine == "event"
+    windows = horizon / 1.0
+    for name in ("tau1", "tau2"):
+        assert len(q.response_times[name]) == len(e.response_times[name])
+        for rq, re_ in zip(q.response_times[name], e.response_times[name]):
+            assert abs(rq - re_) <= 4 * DT + 1e-9, name
+    assert q.deadline_misses == e.deadline_misses
+    assert q.throttle_events == e.throttle_events
+    for b in q.be_progress:
+        assert q.be_progress[b] == pytest.approx(
+            e.be_progress[b], abs=windows * DT + 1e-6), b
+
+
+# ---------------------------------------------------------------------
+# RTG-throttle: critical member protected, sibling paused mid-job
+# ---------------------------------------------------------------------
+
+def rtg_pair():
+    a = RTTask("a", wcet=3.0, period=20.0, cores=(0,), prio=5,
+               mem_intensity=0.2, n_jobs=1)
+    b = RTTask("b", wcet=3.0, period=20.0, cores=(1,), prio=5,
+               mem_rate=2.0, n_jobs=1)
+    intf = matrix_interference({("a", "b"): 2.0, ("b", "a"): 1.25})
+    return VirtualGang("ab", [a, b], prio=5), intf
+
+
+def test_rtg_throttle_protects_critical_member():
+    """With sibling b capped at the critical member's headroom (0.8
+    units/window; b runs 0.4 ms then stalls), a's per-window work is
+    0.4/2 + 0.6/1 = 0.8 -> a finishes at 3.8. Unthrottled, b interferes
+    the whole window and a finishes at 4.875. Once a completes, the
+    surviving sibling runs unthrottled and interference-free."""
+    vg, intf = rtg_pair()
+    assert critical_member(vg, intf).name == "a"
+    assert rtg_sibling_budget(vg, intf) == pytest.approx(0.8)
+
+    pol = VirtualGangPolicy([vg], 2, intf, auto_prio=False,
+                            rtg_throttle=True)
+    r = pol.simulate(20.0)
+    assert r.response_times["a"][0] == pytest.approx(3.8)
+    # b: 0.32 work/window while a lives (done 1.28 by t=3.4, stalled
+    # until a finishes at 3.8), then unthrottled and alone: 3.8 + 1.72
+    assert r.response_times["b"][0] == pytest.approx(5.52)
+    assert r.throttle_events > 0
+
+    base = VirtualGangPolicy([vg, ][:], 2, intf, auto_prio=False,
+                             rtg_throttle=False)
+    r0 = base.simulate(20.0)
+    assert r0.response_times["a"][0] == pytest.approx(4.875)
+    assert r0.throttle_events == 0
+
+    # the duty-cycle RTA bound is sound (it ignores the post-critical
+    # unthrottling, so it upper-bounds the simulated completion)
+    bound = rtg_throttle_wcet(vg, intf)
+    assert bound == pytest.approx(9.15)
+    assert bound >= r.response_times["b"][0] - 1e-9
+
+
+def test_rtg_throttle_engines_agree():
+    vg, intf = rtg_pair()
+    q = VirtualGangPolicy([vg], 2, intf, auto_prio=False,
+                          rtg_throttle=True).build_simulator(dt=DT)
+    e = VirtualGangPolicy([vg], 2, intf, auto_prio=False,
+                          rtg_throttle=True).build_simulator(dt=None)
+    rq, re_ = q.run(20.0), e.run(20.0)
+    for name in ("a", "b"):
+        assert abs(rq.response_times[name][0] -
+                   re_.response_times[name][0]) <= 4 * DT + 1e-9
+    assert rq.throttle_events == re_.throttle_events
+
+
+def test_starved_sibling_rta_rejects():
+    """A zero-headroom critical member (intensity 1.0) starves any
+    traffic-generating sibling: the bound is inf, never a hang."""
+    a = RTTask("a", wcet=1.0, period=20.0, cores=(0,), prio=5,
+               mem_intensity=1.0)
+    b = RTTask("b", wcet=1.0, period=20.0, cores=(1,), prio=5,
+               mem_intensity=0.5)
+    vg = VirtualGang("ab", [a, b], prio=5)
+    assert rtg_sibling_budget(vg) == 0.0
+    assert rtg_throttle_wcet(vg) == float("inf")
+
+
+def test_traffic_rate_derivation():
+    t = RTTask("t", wcet=1, period=10, cores=(0,), prio=1,
+               mem_intensity=0.6)
+    assert t.traffic_rate == 0.6
+    t2 = RTTask("t2", wcet=1, period=10, cores=(0,), prio=1,
+                mem_intensity=0.6, mem_rate=2.5)
+    assert t2.traffic_rate == 2.5

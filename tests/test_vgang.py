@@ -290,6 +290,38 @@ def test_policy_budget_floor_is_min_over_members():
 # SimResult percentiles (satellite: Fig.6 CDFs through the engine)
 # ---------------------------------------------------------------------
 
+def _result_with(rs):
+    return SimResult(trace=Trace(1), response_times={"t": rs},
+                     deadline_misses={"t": 0}, be_progress={},
+                     throttle_events=0, ipis=0, preemptions=0,
+                     slack_time=0.0, horizon=1.0)
+
+
+def test_simresult_percentile_empty_series_is_nan():
+    import math
+    r = _result_with([])
+    assert math.isnan(r.percentile("t", 50.0))
+    assert math.isnan(r.percentile("missing", 99.0))
+    assert math.isnan(r.wcrt("missing"))
+    p = r.percentiles("t")
+    assert p["n"] == 0 and math.isnan(p["p50"])
+
+
+def test_simresult_percentile_single_sample():
+    r = _result_with([7.25])
+    for q in (0.0, 37.0, 50.0, 99.9, 100.0):
+        assert r.percentile("t", q) == 7.25
+    assert r.percentiles("t")["max"] == 7.25
+
+
+def test_simresult_percentile_extremes_and_interpolation():
+    r = _result_with([4.0, 1.0, 3.0, 2.0])       # unsorted on purpose
+    assert r.percentile("t", 0.0) == 1.0          # q=0 -> min
+    assert r.percentile("t", 100.0) == 4.0        # q=100 -> max
+    assert r.percentile("t", 50.0) == pytest.approx(2.5)
+    assert r.percentile("t", 25.0) == pytest.approx(1.75)
+
+
 def test_simresult_percentiles():
     rs = [float(i) for i in range(1, 1001)]          # 1..1000
     r = SimResult(trace=Trace(1), response_times={"t": rs},
@@ -369,3 +401,21 @@ def test_vgang_grid_smoke(tmp_path):
         run_grid(cores=(4,), dists=("mixed",), utils=(0.8,),
                  heuristics=("nope",), n_per_cell=1, sim_check=0,
                  processes=1, out_dir=str(tmp_path))
+
+
+def test_vgang_grid_rtg_throttle_column(tmp_path):
+    """The RTG-throttle policy column: appears under its own label,
+    its RTA verdicts stay sound against the event engine (0 violations
+    on accepted cells), and — pricing sibling regulation on top of the
+    same interference-aware formation — it never accepts more than
+    intfaware."""
+    out = run_grid(cores=(4,), dists=("mixed",), utils=(0.8, 1.2),
+                   heuristics=("intfaware", "rtgT"), n_per_cell=6,
+                   sim_check=2, processes=1, out_dir=str(tmp_path),
+                   seed=1)
+    s = out["summary"]
+    assert s["soundness_violations"] == 0
+    assert s["heuristics"] == ["rtgang", "intfaware", "rtgT"]
+    for row in out["results"]:
+        assert set(row["accept"]) == {"rtgang", "intfaware", "rtgT"}
+        assert row["accept"]["rtgT"] <= row["accept"]["intfaware"] + 1e-9
