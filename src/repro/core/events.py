@@ -152,7 +152,10 @@ class EventEngine:
         sched.reschedule_cpus = _resched
 
         def _gang_change(event, leader):
-            self.handoffs += 1
+            # joins/leaves mark the regime dirty but are membership
+            # churn, not lock hand-offs — keep the metric's meaning
+            if event in ("acquire", "release", "preempt"):
+                self.handoffs += 1
             self._gang_dirty = True
         sched.on_gang_change = _gang_change
 

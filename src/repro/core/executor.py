@@ -15,6 +15,16 @@ Differences from the kernel implementation, modeled explicitly:
 * straggler mitigation: per-quantum deadline monitor with optional
   speculative backup dispatch of idempotent quanta onto idle lanes.
 
+Virtual gangs (DESIGN.md §2.4): ``submit_vgang`` flattens a formed
+``vgang.formation.VirtualGang`` onto disjoint lane blocks (the same
+member remapping the simulator policy uses) and a ``budget_policy`` —
+normally ``vgang.sched.VirtualGangPolicy`` — sets per-lane throttle
+budgets from the glock's live-member state. Budgets are applied *only*
+from the gang-change hook, under the glock: a worker that picked a gang
+but lost the ownership race (or is still draining the gang-isolation
+barrier) never writes budgets, so a stale lane cannot clobber the
+running gang's regime.
+
 Works with any callables; benchmarks bind jitted JAX functions per lane.
 """
 from __future__ import annotations
@@ -26,12 +36,15 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.gang import RTTask, Thread
+from repro.core.gang import RTTask, Thread, _ids
 from repro.core.glock import GangScheduler
 from repro.core.throttle import BandwidthRegulator
 from repro.core.tracing import Trace
 
-_uid = itertools.count(1)
+# job uids share the RTTask counter so that virtual-gang members —
+# whose RTJobs reuse the member task's uid (submit_vgang) — can never
+# collide with uids handed to plain submit_rt jobs
+_uid = _ids
 
 
 @dataclasses.dataclass
@@ -45,6 +58,12 @@ class RTJob:
     period_s: Optional[float] = None       # None => single job
     budget_bytes: float = 0.0              # BE budget while this gang runs
     n_jobs: Optional[int] = None
+    # bytes one quantum of *this* job moves. When the lane's enforced
+    # budget is finite (an RTG-throttle sibling cap), the quantum is
+    # admission-charged against it and the lane stalls to the next
+    # regulation window on denial — the executor analogue of the
+    # engines' RT-thread charging (DESIGN.md §10.1). 0 = never gated.
+    bytes_per_quantum: float = 0.0
     uid: int = dataclasses.field(default_factory=lambda: next(_uid))
 
 
@@ -71,9 +90,17 @@ class GangExecutor:
     def __init__(self, n_lanes: int, *, enabled: bool = True,
                  regulation_interval_s: float = 0.010,
                  straggler_factor: float = 3.0,
-                 backup_dispatch: bool = False):
+                 backup_dispatch: bool = False,
+                 budget_policy=None):
+        """``budget_policy``: optional object with ``apply(glock,
+        regulator)`` — the same interface ``Simulator`` takes
+        (vgang/sched.py) — invoked from the gang-change hook to set
+        per-lane budgets from the live-member state. ``None`` falls back
+        to the paper's rule: the leader's declared budget on every lane
+        the gang does not occupy."""
         self.n_lanes = n_lanes
         self.enabled = enabled
+        self.budget_policy = budget_policy
         self.sched = GangScheduler(n_lanes, enabled=enabled)
         # wake blocked lanes promptly on gang hand-off (lock released or
         # preempted) instead of having them poll. Lock order: glock.g.lock
@@ -86,6 +113,7 @@ class GangExecutor:
         self.trace = Trace(n_lanes)
         self.rt_jobs: List[RTJob] = []
         self.be_jobs: List[BEJob] = []
+        self._jobs: Dict[int, RTJob] = {}          # uid -> job (O(1) map)
         self._instances: Dict[int, List[_JobInstance]] = {}
         self._tasks: Dict[int, RTTask] = {}
         self._threads: Dict[Tuple[int, int], Thread] = {}
@@ -103,7 +131,9 @@ class GangExecutor:
         self.stragglers: List[Tuple[str, int, float]] = []
         self.response_times: Dict[str, List[float]] = {}
         self.be_quanta: Dict[str, int] = {}
+        self.rt_stalls: Dict[str, int] = {}   # RT quanta delayed by a stall
         self._ema: Dict[str, float] = {}
+        self._budget_sig = None     # last glock state budgets derive from
         self._t0 = 0.0
         # lanes currently *executing* an RT quantum -> gang prio. A newly
         # scheduled gang waits for other gangs' in-flight quanta to drain
@@ -113,7 +143,15 @@ class GangExecutor:
 
     # ------------------------------------------------------------------
     def submit_rt(self, job: RTJob):
+        if job.uid in self._instances:
+            raise ValueError(f"duplicate RT job uid {job.uid} "
+                             f"({job.name!r})")
+        if job.lanes and max(job.lanes) >= self.n_lanes:
+            raise ValueError(f"job {job.name!r} pins lane "
+                             f"{max(job.lanes)}, executor has "
+                             f"{self.n_lanes}")
         self.rt_jobs.append(job)
+        self._jobs[job.uid] = job
         self._instances[job.uid] = []
         self.response_times.setdefault(job.name, [])
         # mirror as an RTTask (same uid!) so the glock state machine sees
@@ -130,9 +168,115 @@ class GangExecutor:
         self.be_jobs.append(job)
         self.be_quanta.setdefault(job.name, 0)
 
+    def submit_vgang(self, vg, fns: Dict[str, Callable[[int, int], None]],
+                     *, n_jobs: Optional[int] = None,
+                     time_scale: float = 1e-3,
+                     bytes_per_quantum: Optional[Dict[str, float]] = None
+                     ) -> List[RTJob]:
+        """Submit a formed virtual gang (vgang/formation.VirtualGang):
+        members are flattened onto disjoint lane blocks with the same
+        remapping the simulator policy uses (vgang/sched.remap_members),
+        share the vgang's priority, and — sharing one period with zero
+        offset — release synchronously, so the glock dispatches them as
+        one unit (Algorithm 1 line 14-15). Member uids are preserved, so
+        a ``VirtualGangPolicy`` installed as ``budget_policy`` resolves
+        its per-member budget tables against the mirrored threads.
+
+        ``fns`` maps member task name -> quantum callable(lane, idx);
+        ``time_scale`` converts task-time periods (sim ms) to wall
+        seconds; ``bytes_per_quantum`` optionally declares per-member
+        quantum traffic for RTG-throttle admission gating."""
+        from repro.vgang.sched import remap_members
+        members = remap_members(vg)
+        # validate the whole gang before submitting any member: a lane
+        # or uid rejection halfway through must not leave a half gang
+        # behind (one member dispatching at the vgang's priority without
+        # its siblings or their budget floors)
+        for m in members:
+            if m.uid in self._instances:
+                raise ValueError(f"duplicate RT job uid {m.uid} "
+                                 f"({m.name!r})")
+            if m.cores and max(m.cores) >= self.n_lanes:
+                raise ValueError(
+                    f"virtual gang {vg.name!r} needs lane "
+                    f"{max(m.cores)}, executor has {self.n_lanes}")
+            if m.name not in fns:
+                raise ValueError(f"virtual gang {vg.name!r}: no quantum "
+                                 f"callable for member {m.name!r}")
+        jobs = []
+        for m in members:
+            job = RTJob(
+                name=m.name, fn=fns[m.name], lanes=m.cores, prio=m.prio,
+                period_s=m.period * time_scale,
+                budget_bytes=m.mem_budget,
+                n_jobs=n_jobs if n_jobs is not None else m.n_jobs,
+                bytes_per_quantum=(bytes_per_quantum or {}).get(m.name,
+                                                                0.0),
+                uid=m.uid)
+            self.submit_rt(job)
+            jobs.append(job)
+        return jobs
+
     # ------------------------------------------------------------------
+    def _apply_budgets(self) -> None:
+        """Set per-lane throttle budgets from the glock state. Runs only
+        inside the gang-change hook (under ``glock.g.lock``), so budget
+        writes are serialized with lock-ownership transitions: the
+        enforced regime always belongs to the *current* leader, never to
+        a stale lane that lost the pick ordering. Memoized on the
+        (leader, live member thread uids) signature — consecutive hook
+        events for a regime that did not move (e.g. the leave+join pair
+        when a different same-prio task replaces a member on one lane:
+        the leave already sees the successor installed) skip the lane
+        rescan. The member uids must be part of the signature: that
+        same replacement keeps leader and core mask identical while the
+        budget floor moves with the member set."""
+        g = self.sched.g
+        sig = (g.held_flag,
+               None if g.leader is None else g.leader.uid,
+               tuple(None if th is None else th.task.uid
+                     for th in g.gthreads))
+        if sig == self._budget_sig:
+            return
+        self._budget_sig = sig
+        if self.budget_policy is not None:
+            self.budget_policy.apply(g, self.reg)
+            return
+        if not g.held_flag or g.leader is None:
+            return
+        occupied = {th.core for th in g.gthreads if th is not None}
+        self.reg.set_core_budgets({c: None for c in occupied},
+                                  default=g.leader.mem_budget)
+
+    def _on_release(self) -> None:
+        """Full release: extend the departed gang's *tightest* enforced
+        budget to every lane — its own former lanes included, which were
+        exempt while occupied. Best-effort work on any lane thus stays
+        behind the last declared lid (the paper's §IV-F rule) until the
+        next gang's acquire overwrites it; nothing between two gangs is
+        ever admitted more than the most conservative recent regime."""
+        self._budget_sig = None
+        floor = min(st.budget for st in self.reg.cores.values())
+        if floor != float("inf"):
+            self.reg.set_core_budgets({}, default=floor)
+
     def _on_gang_change(self, event: str, leader) -> None:
-        if event in ("release", "preempt"):
+        # acquire/join/leave move the live-member set -> re-derive
+        # budgets while still under g.lock; release floors every lane at
+        # the departing gang's regime (conservative hand-off).
+        if event in ("acquire", "join", "leave"):
+            self._apply_budgets()
+            if event == "leave":
+                # a leave only raises budgets (min over fewer members) —
+                # wake admission-stalled and idle lanes so a lifted
+                # stall is observed now, not at the next poll timeout
+                with self._wake:
+                    self._wake.notify_all()
+        elif event == "release":
+            self._on_release()
+            with self._wake:
+                self._wake.notify_all()
+        elif event == "preempt":
             with self._wake:
                 self._wake.notify_all()
 
@@ -194,6 +338,70 @@ class GangExecutor:
         return next((i for i in self._instances[job.uid]
                      if lane in i.remaining_lanes), None)
 
+    def _admit_rt_quantum(self, lane: int,
+                          job: RTJob) -> Tuple[str, bool]:
+        """Admission-charge one RT quantum against the lane's enforced
+        budget (RTG-throttle: sibling lanes carry a finite cap while the
+        critical member's lanes are uncapped — vgang/sched.py). On
+        denial the lane stalls to the next regulation window, exactly
+        the engines' RT-stall semantics at quantum granularity. The
+        caller must declare budgets that admit at least one quantum per
+        window (``bytes_per_quantum <= cap``), the same no-starvation
+        condition rta.rtg_throttle_wcet prices as an infinite bound.
+
+        Returns ``(verdict, stalled)``: verdict ``"run"`` when admitted,
+        ``"stop"`` when the executor shut down mid-stall, ``"requeue"``
+        when the gang lost the lock while waiting — a preemptor's budget
+        regime may never admit this quantum (its floor can sit below our
+        bytes), and starting it under a foreign regime would also be
+        wrong, so the worker must re-enter the scheduler instead of
+        spinning on denials while the preemptor waits at the
+        gang-isolation barrier. ``stalled`` reports whether a denial
+        actually delayed the quantum (so the caller traces a throttled
+        span only for real stalls, not admission overhead). Gating needs
+        a gang regime: with the scheduler disabled (passthrough mode,
+        held_flag never set) quanta run ungated."""
+        if job.bytes_per_quantum <= 0.0 or not self.sched.enabled:
+            return "run", False
+        g = self.sched.g
+        stalled = False
+        while True:
+            # ownership check and charge are one atomic step under
+            # g.lock (budget writes happen under it, in the gang-change
+            # hook): a preemptor's acquire may have raised this lane's
+            # budget — lifting our stall — and a charge made after
+            # losing the lock would admit our quantum against the
+            # *foreign* regime instead of requeueing
+            with g.lock:
+                if not (g.held_flag and g.leader is not None
+                        and g.leader.prio == job.prio):
+                    return "requeue", stalled
+                now = self._now()
+                if self.reg.is_stalled(lane, now):
+                    # existing stall (ours or a BE quantum's trip):
+                    # don't re-charge (each denied retry would inflate
+                    # total_denied by a spurious-wakeup-dependent
+                    # factor), just wait it out
+                    admitted = False
+                else:
+                    admitted = self.reg.charge(
+                        lane, job.bytes_per_quantum, now)
+            if admitted:
+                return "run", stalled
+            if not stalled:
+                # first delay for this quantum: count it once, whether
+                # the window was tripped by our own charge or was
+                # already spent (e.g. by a best-effort filler)
+                with self._lock:
+                    self.rt_stalls[job.name] = \
+                        self.rt_stalls.get(job.name, 0) + 1
+            stalled = True
+            wait = self.reg.next_release(lane, now) - now
+            with self._wake:
+                if self._stop:
+                    return "stop", stalled
+                self._wake.wait(timeout=min(max(wait, 0.0002), 0.05))
+
     # ------------------------------------------------------------------
     def _worker(self, lane: int):
         prev: Optional[Thread] = None
@@ -206,9 +414,13 @@ class GangExecutor:
             picked = self.sched.pick_next_task_rt(lane, prev, nxt)
             prev = None
             if picked is not None:
-                job = next(j for j in self.rt_jobs
-                           if j.uid == picked.task.uid)
-                self.reg.set_gang_budget(job.budget_bytes)
+                job = self._jobs[picked.task.uid]
+                # NOTE: no budget write here. Budgets are applied from
+                # the gang-change hook under g.lock (_apply_budgets); a
+                # pre-barrier write from this thread could land *after*
+                # another gang preempted us and clobber the running
+                # gang's regime (the stale-lane race pinned by
+                # tests/test_executor_vgang.py).
                 inst = None
                 with self._lock:
                     inst = self._active_instance(job, lane)
@@ -232,22 +444,41 @@ class GangExecutor:
                 t0 = self._now()
                 if inst.start is None:
                     inst.start = t0
+                requeue = False
+                stalled = False
                 try:
-                    job.fn(lane, inst.index)
+                    verdict, stalled = self._admit_rt_quantum(lane, job)
+                    if verdict == "stop":
+                        return               # stopped while stalled
+                    if verdict == "requeue":
+                        requeue = True       # preempted while stalled
+                    else:
+                        t_run = self._now()
+                        job.fn(lane, inst.index)
                 finally:
                     with self._wake:
                         self._inflight.pop(lane, None)
                         self._wake.notify_all()
+                if requeue:
+                    # the quantum never started: leave the instance
+                    # pending and re-enter the scheduler (the preempting
+                    # gang proceeds; we block at Algorithm 1 line 18-19)
+                    prev = picked
+                    continue
                 t1 = self._now()
-                self.trace.record(lane, job.name, t0 * 1e3, t1 * 1e3)
-                dur = t1 - t0
+                dur = t1 - t_run
                 key = job.name
-                ema = self._ema.get(key)
-                if ema is not None and dur > self.straggler_factor * ema:
-                    self.stragglers.append((key, lane, dur))
-                self._ema[key] = dur if ema is None else \
-                    0.9 * ema + 0.1 * dur
                 with self._lock:
+                    if stalled:              # admission stall (§2.4)
+                        self.trace.record(lane, f"throttled:{key}",
+                                          t0 * 1e3, t_run * 1e3)
+                    self.trace.record(lane, key, t_run * 1e3, t1 * 1e3)
+                    ema = self._ema.get(key)
+                    if ema is not None and \
+                            dur > self.straggler_factor * ema:
+                        self.stragglers.append((key, lane, dur))
+                    self._ema[key] = dur if ema is None else \
+                        0.9 * ema + 0.1 * dur
                     inst.remaining_lanes.discard(lane)
                     if not inst.remaining_lanes and inst.finish is None:
                         inst.finish = t1
@@ -266,8 +497,10 @@ class GangExecutor:
                     t0 = self._now()
                     be.fn(lane)
                     t1 = self._now()
-                    self.trace.record(lane, be.name, t0 * 1e3, t1 * 1e3)
-                    self.be_quanta[be.name] += 1
+                    with self._lock:
+                        self.trace.record(lane, be.name,
+                                          t0 * 1e3, t1 * 1e3)
+                        self.be_quanta[be.name] += 1
                     ran_be = True
                     break
             if not ran_be:
@@ -301,6 +534,8 @@ class GangExecutor:
             "response_times": self.response_times,
             "be_quanta": dict(self.be_quanta),
             "stragglers": list(self.stragglers),
+            "rt_stalls": dict(self.rt_stalls),
             "preemptions": self.sched.g.preemptions,
             "acquisitions": self.sched.g.acquisitions,
+            "ipis": self.sched.g.ipis_sent,
         }

@@ -65,10 +65,14 @@ class GangScheduler:
         self.g = GLock(n_cores=n_cores)
         self.reschedule_cpus = reschedule_cpus or (lambda cores: None)
         self.enabled = enabled   # paper: runtime toggle via sched_features
-        # gang hand-off hook: called with ("acquire"|"release"|"preempt",
-        # leader RTTask or None) whenever lock ownership changes. The
-        # event-driven engine counts hand-offs through it; the executor
-        # wakes barrier waiters on "release".
+        # gang hand-off hook: called with ("acquire"|"join"|"leave"|
+        # "release"|"preempt", leader RTTask or None) whenever lock
+        # ownership or membership changes — "join" when a core enters the
+        # running gang at equal priority (Algorithm 1 line 14-15),
+        # "leave" when a member thread departs while the lock stays held.
+        # The event-driven engine counts hand-offs through it; the
+        # executor applies throttle budgets on acquire/join/leave (the
+        # live-member set moved) and wakes barrier waiters on "release".
         self.on_gang_change: Optional[
             Callable[[str, Optional[RTTask]], None]] = None
 
@@ -77,6 +81,11 @@ class GangScheduler:
         g = self.g
         g.held_flag = True
         g.locked_cores = g._set(g.locked_cores, cpu)
+        # the acquiring core may have blocked at line 18-19 earlier (e.g.
+        # it now preempts the gang that blocked it); it is no longer
+        # waiting, so drop its blocked bit or the next release sends it a
+        # spurious reschedule IPI
+        g.blocked_cores = g._clear(g.blocked_cores, cpu)
         g.leader = thread.task
         g.gthreads[cpu] = thread
         g.acquisitions += 1
@@ -84,14 +93,23 @@ class GangScheduler:
             self.on_gang_change("acquire", g.leader)
 
     # ---- Algorithm 3: try release -------------------------------------------
-    def try_glock_release(self, prev: Optional[Thread]) -> None:
+    def try_glock_release(self, prev: Optional[Thread]) -> bool:
+        """Returns True when ``prev`` departed while the lock stays held
+        (a *partial* leave). The "leave" notification is deliberately
+        NOT fired here: the caller (pick_next_task_rt) settles it after
+        seeing what replaces ``prev`` — a same-task re-join at the next
+        quantum means the member set never actually changed, and firing
+        leave+join would transiently lift throttle caps a concurrent
+        lock-free ``charge`` could slip through."""
         g = self.g
         if prev is None:
-            return
+            return False
+        left = False
         for cpu in g.cores_in(g.locked_cores):
             if g.gthreads[cpu] is prev:
                 g.locked_cores = g._clear(g.locked_cores, cpu)
                 g.gthreads[cpu] = None
+                left = True
         if g._is_zero(g.locked_cores):
             g.held_flag = False
             g.leader = None
@@ -102,6 +120,14 @@ class GangScheduler:
             g.blocked_cores = 0
             if self.on_gang_change is not None:
                 self.on_gang_change("release", None)
+            return False
+        return left
+
+    def _settle_leave(self, left: bool) -> None:
+        """Emit the deferred partial-leave notification: the live-member
+        set shrank (per-member budget floors may rise)."""
+        if left and self.g.held_flag and self.on_gang_change is not None:
+            self.on_gang_change("leave", self.g.leader)
 
     # ---- Algorithm 4: gang preemption ----------------------------------------
     def do_gang_preemption(self) -> List[int]:
@@ -131,9 +157,11 @@ class GangScheduler:
             return next_thread
         g = self.g
         with g.lock:
+            left = False
             if g.held_flag:
-                self.try_glock_release(prev)                     # Line 11
+                left = self.try_glock_release(prev)              # Line 11
             if next_thread is None:
+                self._settle_leave(left)
                 return None
             task = next_thread.task
             if not g.held_flag:                                  # Line 12-13
@@ -141,13 +169,28 @@ class GangScheduler:
                 return next_thread
             if task.prio == g.leader.prio:                       # Line 14-15
                 g.locked_cores = g._set(g.locked_cores, cpu)
+                # a core that blocked at line 18-19 and later joins the
+                # running gang is no longer waiting: keep the blocked set
+                # honest, or the eventual release IPIs it spuriously and
+                # inflates ipis_sent
+                g.blocked_cores = g._clear(g.blocked_cores, cpu)
                 g.gthreads[cpu] = next_thread
+                # same task re-picked at a quantum boundary: the member
+                # set never changed — suppress the leave+join pair so
+                # budget hooks see no transient cap lift
+                if prev is None or task is not prev.task or not left:
+                    self._settle_leave(left)
+                    if self.on_gang_change is not None:
+                        self.on_gang_change("join", g.leader)
                 return next_thread
             if task.prio > g.leader.prio:                        # Line 16-17
+                # pending leave is subsumed: preempt + acquire re-derive
+                # the whole regime
                 self.do_gang_preemption()
                 self.acquire_gang_lock(cpu, next_thread)
                 return next_thread
             # Line 18-19: lower priority -> blocked
+            self._settle_leave(left)
             g.blocked_cores = g._set(g.blocked_cores, cpu)
             return None
 

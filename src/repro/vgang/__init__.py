@@ -25,12 +25,12 @@ from repro.vgang.formation import (VirtualGang, assign_priorities,
                                    total_vgang_utilization)
 from repro.vgang.rta import (response_time_vgang, schedulable_vgangs,
                              vgang_equivalent_task)
-from repro.vgang.sched import VirtualGangPolicy
+from repro.vgang.sched import VirtualGangPolicy, remap_members
 
 __all__ = [
     "VirtualGang", "assign_priorities", "best_fit_utilization",
     "exhaustive_optimal", "first_fit_decreasing", "interference_aware",
     "intensity_interference", "singleton_vgangs",
     "total_vgang_utilization", "response_time_vgang", "schedulable_vgangs",
-    "vgang_equivalent_task", "VirtualGangPolicy",
+    "vgang_equivalent_task", "VirtualGangPolicy", "remap_members",
 ]

@@ -30,6 +30,29 @@ from repro.vgang.formation import (VirtualGang, assign_priorities,
 from repro.vgang.rta import schedulable_vgangs
 
 
+def remap_members(vg: VirtualGang) -> List[RTTask]:
+    """Flatten one virtual gang's members onto a disjoint core/lane
+    block starting at 0: members share the vgang's priority and a
+    synchronous release (zero offset), so the glock dispatches them as
+    one unit. uids are preserved across the remap, so per-member tables
+    keyed by uid (budgets, critical-member choice) remain valid. Shared
+    by the simulator policy below and GangExecutor.submit_vgang
+    (DESIGN.md §2.4)."""
+    out = []
+    cursor = 0
+    for m in vg.members:
+        cores = tuple(range(cursor, cursor + m.n_threads))
+        cursor += m.n_threads
+        wpc = None
+        if m.wcet_per_core:
+            wpc = {new: m.wcet_per_core.get(old, m.wcet)
+                   for old, new in zip(m.cores, cores)}
+        out.append(dataclasses.replace(
+            m, prio=vg.prio, cores=cores, release_offset=0.0,
+            wcet_per_core=wpc))
+    return out
+
+
 class VirtualGangPolicy:
     """Budget policy + taskset builder for a formed virtual-gang set.
 
@@ -70,25 +93,19 @@ class VirtualGangPolicy:
         self._members: List[RTTask] = []
         self._budget: Dict[int, float] = {}       # member uid -> budget
         self._critical: Dict[int, int] = {}       # vgang prio -> member uid
-        self._sibling_budget: Dict[int, float] = {}    # vgang prio -> cap
+        # (vgang prio, regulation interval) -> sibling cap: the headroom
+        # fallback scales with the interval, and one policy object may
+        # drive both a simulator (interval in sim-ms) and an executor
+        # (interval in wall-s)
+        self._sibling_budget: Dict[tuple, float] = {}
         for vg in self.vgangs:
             self._critical[vg.prio] = critical_member(
                 vg, self.interference).uid
         for vg in self.vgangs:
-            cursor = 0
-            for m in vg.members:
-                cores = tuple(range(cursor, cursor + m.n_threads))
-                cursor += m.n_threads
-                wpc = None
-                if m.wcet_per_core:
-                    wpc = {new: m.wcet_per_core.get(old, m.wcet)
-                           for old, new in zip(m.cores, cores)}
-                # members of one virtual gang release together (one unit)
-                member = dataclasses.replace(
-                    m, prio=vg.prio, cores=cores, release_offset=0.0,
-                    wcet_per_core=wpc)
+            # members of one virtual gang release together (one unit)
+            for member in remap_members(vg):
                 self._members.append(member)
-                self._budget[member.uid] = m.mem_budget
+                self._budget[member.uid] = member.mem_budget
 
     # ---- taskset --------------------------------------------------------
     def taskset(self) -> List[RTTask]:
@@ -120,11 +137,11 @@ class VirtualGangPolicy:
             # RTG-throttle: the critical member runs unthrottled, every
             # other live member's cores (and the best-effort fillers)
             # are capped at the critical member's tolerable traffic
-            cap = self._sibling_budget.get(vg.prio)
+            cap = self._sibling_budget.get((vg.prio, reg.interval))
             if cap is None:
                 cap = rtg_sibling_budget(vg, self.interference,
                                          reg.interval)
-                self._sibling_budget[vg.prio] = cap
+                self._sibling_budget[(vg.prio, reg.interval)] = cap
             per_core = {th.core: (None if th.task.uid == crit_uid
                                   else cap)
                         for th in g.gthreads if th is not None}
@@ -147,6 +164,36 @@ class VirtualGangPolicy:
 
     def simulate(self, horizon: float, **kwargs) -> SimResult:
         return self.build_simulator(**kwargs).run(horizon)
+
+    def build_executor(self, fns, *, n_lanes: Optional[int] = None,
+                       n_jobs: Optional[int] = None,
+                       time_scale: float = 1e-3,
+                       bytes_per_quantum=None, **kwargs):
+        """GangExecutor (core/executor.py) over the formed set: each
+        virtual gang's members land on disjoint lane blocks via
+        ``remap_members`` and this policy is installed as the executor's
+        ``budget_policy``, so the glock's gang-change hook enforces
+        min-over-live-member lane budgets — and, under ``rtg_throttle``,
+        uncaps the critical member's lanes while admission-capping
+        sibling lanes (and their best-effort fillers) at
+        ``rtg_sibling_budget``. Give sibling jobs a ``bytes_per_quantum``
+        (name -> bytes) to have their quanta admission-charged against
+        that cap. ``fns`` maps member task name -> callable(lane, idx);
+        ``time_scale`` converts task-time (sim ms) to wall seconds.
+
+        Note: executor-side RTG-throttle wants members with a declared
+        positive ``mem_budget`` (bytes per regulation window); the
+        headroom fallback ``(1 - intensity) * interval`` is in simulator
+        units."""
+        from repro.core.executor import GangExecutor
+        ex = GangExecutor(
+            self.n_cores if n_lanes is None else n_lanes,
+            budget_policy=self, **kwargs)
+        for vg in self.vgangs:
+            ex.submit_vgang(vg, fns, n_jobs=n_jobs,
+                            time_scale=time_scale,
+                            bytes_per_quantum=bytes_per_quantum)
+        return ex
 
     def rta(self) -> Dict[str, Dict]:
         """Vgang RTA verdicts for the formed set (vgang/rta.py)."""

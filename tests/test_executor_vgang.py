@@ -1,0 +1,367 @@
+"""Executor-side virtual gangs (DESIGN.md §2.4) and the budget
+hand-off ordering fix: budgets are applied from the glock's gang-change
+hook, never by a worker between pick and the gang-isolation barrier."""
+import time
+
+import pytest
+
+from repro.core.executor import BEJob, GangExecutor, RTJob
+from repro.core.gang import RTTask
+from repro.vgang.formation import VirtualGang, assign_priorities
+from repro.vgang.sched import VirtualGangPolicy, remap_members
+
+
+def _sleep_fn(dur):
+    def fn(lane, idx):
+        time.sleep(dur)
+    return fn
+
+
+# ---------------------------------------------------------------------
+# the pre-barrier budget-clobber regression (ISSUE 4 satellite 1)
+# ---------------------------------------------------------------------
+
+def test_stale_lane_cannot_clobber_running_gang_budget():
+    """Pins the old racy interleaving: lane 0 picks gang A (acquiring
+    the glock) but is descheduled before it can touch the regulator;
+    lane 1's higher-priority gang B preempts A and starts. The old code
+    had lane 0 resume with ``reg.set_gang_budget(A.budget)`` — clobbering
+    running gang B's best-effort budget fleet-wide. Fixed code applies
+    budgets inside the gang-change hook under g.lock, so (a) B's budget
+    is already enforced the instant B acquires, and (b) the stale lane-0
+    worker has no budget write at all between pick and the barrier.
+
+    On the old code the first assertion fails (the hook applied no
+    budgets; lanes still carry the boot-time inf budget)."""
+    ex = GangExecutor(n_lanes=3, regulation_interval_s=0.01)
+    a = RTJob("A", _sleep_fn(0.001), lanes=(0,), prio=1,
+              budget_bytes=100.0, n_jobs=1)
+    b = RTJob("B", _sleep_fn(0.001), lanes=(1,), prio=9,
+              budget_bytes=0.0, n_jobs=1)
+    ex.submit_rt(a)
+    ex.submit_rt(b)
+    ex._release_jobs()
+
+    th_a = ex._threads[(a.uid, 0)]
+    th_b = ex._threads[(b.uid, 1)]
+
+    picked_a = ex.sched.pick_next_task_rt(0, None, th_a)
+    assert picked_a is th_a
+    # A leads: its budget is enforced on the non-member lanes at the
+    # acquire instant, from inside the glock — not later by the worker
+    assert ex.reg.cores[2].budget == pytest.approx(100.0)
+    assert ex.reg.cores[1].budget == pytest.approx(100.0)
+    assert ex.reg.cores[0].budget == float("inf")   # gang lane exempt
+
+    # lane 0 is now "descheduled between pick and barrier"; gang B
+    # preempts A from lane 1
+    picked_b = ex.sched.pick_next_task_rt(1, None, th_b)
+    assert picked_b is th_b
+    assert ex.sched.g.leader is ex._tasks[b.uid]
+    assert ex.reg.cores[2].budget == pytest.approx(0.0)
+    assert ex.reg.cores[0].budget == pytest.approx(0.0)
+
+    # the stale lane-0 worker resumes: everything it still does before
+    # the barrier (instance lookup) leaves the regulator untouched
+    inst = ex._active_instance(a, 0)
+    assert inst is not None
+    assert ex.reg.cores[2].budget == pytest.approx(0.0), \
+        "stale lane clobbered the running gang's budget"
+    assert ex.sched.check_invariant()
+
+
+def test_budget_persists_across_release_until_next_acquire():
+    """Full release extends the departing gang's tightest budget to
+    every lane — including its own former (exempt-while-occupied)
+    lanes, so best-effort work there stays behind the last declared lid
+    (paper §IV-F); the next gang's acquire overwrites it."""
+    ex = GangExecutor(n_lanes=2, regulation_interval_s=0.01)
+    a = RTJob("A", _sleep_fn(0.001), lanes=(0,), prio=5,
+              budget_bytes=7.0, n_jobs=1)
+    ex.submit_rt(a)
+    ex._release_jobs()
+    th_a = ex._threads[(a.uid, 0)]
+    picked = ex.sched.pick_next_task_rt(0, None, th_a)
+    assert ex.reg.cores[1].budget == pytest.approx(7.0)
+    assert ex.reg.cores[0].budget == float("inf")   # occupied: exempt
+    ex.sched.pick_next_task_rt(0, picked, None)     # full release
+    assert not ex.sched.g.held_flag
+    assert ex.reg.cores[1].budget == pytest.approx(7.0)
+    assert ex.reg.cores[0].budget == pytest.approx(7.0)
+
+
+# ---------------------------------------------------------------------
+# submit_vgang / build_executor: lane remapping + live-member budgets
+# ---------------------------------------------------------------------
+
+def _two_member_vgang(b1=5.0, b2=2.0, w2=2):
+    m1 = RTTask("m1", wcet=8.0, period=40.0, cores=(3,), prio=0,
+                mem_budget=b1)
+    m2 = RTTask("m2", wcet=6.0, period=40.0, cores=(5, 6)[:w2], prio=0,
+                mem_budget=b2)
+    return VirtualGang("m1+m2", members=[m1, m2], prio=4)
+
+
+def test_submit_vgang_remaps_onto_disjoint_lane_blocks():
+    vg = _two_member_vgang(w2=2)
+    ex = GangExecutor(n_lanes=4)
+    jobs = ex.submit_vgang(vg, {"m1": _sleep_fn(0), "m2": _sleep_fn(0)},
+                           n_jobs=1)
+    assert [j.lanes for j in jobs] == [(0,), (1, 2)]
+    assert all(j.prio == 4 for j in jobs)
+    assert all(j.period_s == pytest.approx(0.040) for j in jobs)
+    # uids preserved from the member tasks (policy budget tables match)
+    assert [j.uid for j in jobs] == [m.uid for m in vg.members]
+    remapped = remap_members(vg)
+    assert [m.cores for m in remapped] == [(0,), (1, 2)]
+    assert [m.uid for m in remapped] == [m.uid for m in vg.members]
+
+
+def test_vgang_live_member_budgets_through_executor_hook():
+    """min-over-live-members on the free lanes, member lanes uncapped;
+    a member leaving mid-gang raises the floor immediately (the glock's
+    new join/leave events drive VirtualGangPolicy.apply)."""
+    vg = _two_member_vgang(b1=5.0, b2=2.0, w2=1)
+    policy = VirtualGangPolicy([vg], n_cores=4, auto_prio=False)
+    ex = policy.build_executor({"m1": _sleep_fn(0), "m2": _sleep_fn(0)},
+                               n_jobs=1)
+    ex._release_jobs()
+    m1, m2 = vg.members
+    th1 = ex._threads[(m1.uid, 0)]
+    th2 = ex._threads[(m2.uid, 1)]
+
+    p1 = ex.sched.pick_next_task_rt(0, None, th1)    # m1 acquires
+    assert ex.reg.cores[2].budget == pytest.approx(5.0)
+    assert ex.reg.cores[0].budget == float("inf")
+
+    p2 = ex.sched.pick_next_task_rt(1, None, th2)    # m2 joins
+    assert p1 is th1 and p2 is th2
+    assert ex.sched.check_invariant()
+    assert ex.reg.cores[2].budget == pytest.approx(2.0)   # min over live
+    assert ex.reg.cores[3].budget == pytest.approx(2.0)
+    assert ex.reg.cores[0].budget == float("inf")
+    assert ex.reg.cores[1].budget == float("inf")
+
+    # the sensitive member m2 finishes -> "leave" -> floor rises to m1's
+    ex.sched.pick_next_task_rt(1, p2, None)
+    assert ex.sched.g.held_flag                       # m1 still holds
+    assert ex.reg.cores[2].budget == pytest.approx(5.0)
+
+
+def test_rtg_throttle_caps_sibling_lanes_not_critical():
+    """RTG-throttle through the executor hook: the critical member's
+    lanes stay uncapped; sibling lanes (and the best-effort fillers) are
+    capped at the critical member's declared tolerable traffic."""
+    # m1 has the larger WCET -> critical; cap = its mem_budget
+    vg = _two_member_vgang(b1=3.0, b2=50.0, w2=1)
+    policy = VirtualGangPolicy([vg], n_cores=4, auto_prio=False,
+                               rtg_throttle=True)
+    ex = policy.build_executor({"m1": _sleep_fn(0), "m2": _sleep_fn(0)},
+                               n_jobs=1)
+    ex._release_jobs()
+    m1, m2 = vg.members
+    ex.sched.pick_next_task_rt(0, None, ex._threads[(m1.uid, 0)])
+    ex.sched.pick_next_task_rt(1, None, ex._threads[(m2.uid, 1)])
+    assert ex.reg.cores[0].budget == float("inf")     # critical lane
+    assert ex.reg.cores[1].budget == pytest.approx(3.0)   # sibling lane
+    assert ex.reg.cores[2].budget == pytest.approx(3.0)   # BE filler
+    assert ex.reg.cores[3].budget == pytest.approx(3.0)
+
+
+def test_executor_vgang_end_to_end_sync_release():
+    """Members of one virtual gang co-run (same prio passes the
+    gang-isolation barrier together) and both record response times."""
+    vg = _two_member_vgang(w2=1)
+    policy = VirtualGangPolicy([vg], n_cores=2, auto_prio=False)
+    seen = []
+    ex = policy.build_executor(
+        {"m1": lambda lane, idx: (seen.append(("m1", lane)),
+                                  time.sleep(0.002)),
+         "m2": lambda lane, idx: (seen.append(("m2", lane)),
+                                  time.sleep(0.002))},
+        n_jobs=5)
+    stats = ex.run(0.5)
+    assert len(stats["response_times"]["m1"]) == 5
+    assert len(stats["response_times"]["m2"]) == 5
+    assert {lane for name, lane in seen if name == "m1"} == {0}
+    assert {lane for name, lane in seen if name == "m2"} == {1}
+    assert ex.sched.check_invariant()
+
+
+def test_rt_admission_stall_on_sibling_cap():
+    """A sibling whose quanta exceed the per-window cap stalls to the
+    next regulation window (executor analogue of the engines' RT-thread
+    charging); the critical member is never gated."""
+    m1 = RTTask("crit", wcet=8.0, period=10.0, cores=(0,), prio=0,
+                mem_budget=4.0)
+    m2 = RTTask("sib", wcet=1.0, period=10.0, cores=(1,), prio=0,
+                mem_budget=100.0)
+    vg = VirtualGang("crit+sib", members=[m1, m2], prio=3)
+    policy = VirtualGangPolicy([vg], n_cores=2, auto_prio=False,
+                               rtg_throttle=True)
+    # period 10 ms * 1e-3 = 0.01 s; window = 0.05 s -> 5 sibling quanta
+    # land per window, cap 4.0 admits only one 3.0-byte quantum
+    ex = policy.build_executor(
+        {"crit": _sleep_fn(0.001), "sib": _sleep_fn(0.001)},
+        n_jobs=20, bytes_per_quantum={"sib": 3.0},
+        regulation_interval_s=0.05)
+    stats = ex.run(0.8)
+    assert stats["rt_stalls"].get("sib", 0) > 0
+    assert stats["rt_stalls"].get("crit", 0) == 0
+    assert ex.reg.cores[1].throttle_events > 0
+    assert ex.reg.cores[0].throttle_events == 0
+    assert len(stats["response_times"]["sib"]) == 20
+    assert ex.sched.check_invariant()
+    # stalled quanta show up as throttled:<name> trace segments
+    assert any(s.label == "throttled:sib" for s in ex.trace.segments)
+
+
+def test_admission_requeues_when_another_gang_leads():
+    """A quantum whose gang lost the lock while it waited for admission
+    must requeue, never charge: the preemptor's regime could admit it
+    (its acquire may have lifted the stall), but the bytes would come
+    out of the preemptor's regulation window."""
+    ex = GangExecutor(n_lanes=2, regulation_interval_s=0.01)
+    a = RTJob("A", _sleep_fn(0), lanes=(0,), prio=2, budget_bytes=0.0,
+              bytes_per_quantum=1.0, n_jobs=1)
+    b = RTJob("B", _sleep_fn(0), lanes=(1,), prio=9, budget_bytes=1e9,
+              n_jobs=1)
+    ex.submit_rt(a)
+    ex.submit_rt(b)
+    ex._release_jobs()
+    ex.sched.pick_next_task_rt(0, None, ex._threads[(a.uid, 0)])
+    ex.sched.pick_next_task_rt(1, None, ex._threads[(b.uid, 1)])  # preempt
+    used_before = ex.reg.cores[0].total_used
+    assert ex._admit_rt_quantum(0, a)[0] == "requeue"
+    assert ex.reg.cores[0].total_used == used_before   # nothing charged
+
+
+def test_admission_gating_bypassed_when_scheduler_disabled():
+    """Passthrough mode (enabled=False) never sets held_flag, so gated
+    quanta must run ungated instead of requeue-spinning forever."""
+    ex = GangExecutor(n_lanes=1, enabled=False)
+    a = RTJob("A", _sleep_fn(0), lanes=(0,), prio=2,
+              bytes_per_quantum=1.0, period_s=0.005, n_jobs=5)
+    ex.submit_rt(a)
+    stats = ex.run(0.3)
+    assert len(stats["response_times"]["A"]) == 5
+    assert stats["rt_stalls"] == {}
+
+
+def test_budget_memo_tracks_member_identity_not_just_mask():
+    """A different same-prio task replacing a member on the same lane
+    keeps leader and core mask identical while the floor moves with the
+    member set — the apply memo must not swallow that re-derivation."""
+    vg = _two_member_vgang(b1=5.0, b2=2.0, w2=1)
+    policy = VirtualGangPolicy([vg], n_cores=3, auto_prio=False)
+    ex = GangExecutor(n_lanes=3, budget_policy=policy)
+    m1, m2 = vg.members
+    # both members submitted on the *same* lane: m2 replaces m1 at a
+    # quantum boundary without the core mask ever changing
+    for m, fn in ((m1, _sleep_fn(0)), (m2, _sleep_fn(0))):
+        ex.submit_rt(RTJob(m.name, fn, lanes=(0,), prio=vg.prio,
+                           budget_bytes=m.mem_budget, n_jobs=1,
+                           uid=m.uid))
+    ex._release_jobs()
+    th1 = ex._threads[(m1.uid, 0)]
+    th2 = ex._threads[(m2.uid, 0)]
+    picked = ex.sched.pick_next_task_rt(0, None, th1)
+    assert ex.reg.cores[2].budget == pytest.approx(5.0)   # m1's floor
+    assert ex.sched.pick_next_task_rt(0, picked, th2) is th2
+    assert ex.reg.cores[2].budget == pytest.approx(2.0)   # m2's floor
+
+
+def test_rtg_sibling_cap_cache_is_per_interval():
+    """One policy object drives both engines and the executor; the
+    headroom fallback cap scales with the regulation interval, so the
+    cache must not leak a sim-unit cap into the executor's regulator."""
+    m1 = RTTask("c0", wcet=8.0, period=40.0, cores=(0,), prio=0,
+                mem_budget=0.0, mem_intensity=0.6)   # headroom fallback
+    m2 = RTTask("s0", wcet=2.0, period=40.0, cores=(1,), prio=0,
+                mem_budget=9.0)
+    vg = VirtualGang("c0+s0", members=[m1, m2], prio=5)
+    policy = VirtualGangPolicy([vg], n_cores=3, auto_prio=False,
+                               rtg_throttle=True)
+
+    def caps_with(interval):
+        ex = policy.build_executor({"c0": _sleep_fn(0), "s0": _sleep_fn(0)},
+                                   n_jobs=1,
+                                   regulation_interval_s=interval)
+        ex._release_jobs()
+        ex.sched.pick_next_task_rt(0, None, ex._threads[(m1.uid, 0)])
+        ex.sched.pick_next_task_rt(1, None, ex._threads[(m2.uid, 1)])
+        return ex.reg.cores[1].budget
+
+    assert caps_with(1.0) == pytest.approx(0.4)      # (1-0.6)*1.0
+    assert caps_with(0.010) == pytest.approx(0.004)  # (1-0.6)*0.010
+
+
+def test_submit_vgang_rejects_duplicate_uids_and_oversized_gangs():
+    vg = _two_member_vgang()
+    ex = GangExecutor(n_lanes=4)
+    fns = {"m1": _sleep_fn(0), "m2": _sleep_fn(0)}
+    ex.submit_vgang(vg, fns)
+    n_before = len(ex.rt_jobs)
+    with pytest.raises(ValueError):
+        ex.submit_vgang(vg, fns)          # same member uids again
+    assert len(ex.rt_jobs) == n_before    # atomic: no partial submit
+    wide = GangExecutor(n_lanes=2)
+    with pytest.raises(ValueError):
+        wide.submit_vgang(_two_member_vgang(w2=2), fns)
+    # rejection must not leave a half gang behind (m1 fits, m2 doesn't)
+    assert wide.rt_jobs == []
+    # a missing member callable is caught up front, not mid-submit
+    nofn = GangExecutor(n_lanes=4)
+    with pytest.raises(ValueError):
+        nofn.submit_vgang(_two_member_vgang(), {"m1": _sleep_fn(0)})
+    assert nofn.rt_jobs == []
+
+
+def test_formed_multi_vgang_executor_one_gang_at_a_time():
+    """Two formed vgangs at distinct priorities never co-run; budgets
+    observed on the free lane during each gang's quantum are that
+    gang's floor (no cross-gang clobber under load)."""
+    a1 = RTTask("a1", wcet=2.0, period=30.0, cores=(0,), prio=0,
+                mem_budget=8.0)
+    a2 = RTTask("a2", wcet=2.0, period=30.0, cores=(1,), prio=0,
+                mem_budget=6.0)
+    b1 = RTTask("b1", wcet=2.0, period=60.0, cores=(0, 1), prio=0,
+                mem_budget=1.0)
+    vgangs = assign_priorities([
+        VirtualGang("a1+a2", members=[a1, a2]),
+        VirtualGang("b1", members=[b1])])
+    policy = VirtualGangPolicy(vgangs, n_cores=3)
+    floors = {vg.prio: min(m.mem_budget for m in vg.members)
+              for vg in policy.vgangs}
+    bad = []
+    overlap = []
+
+    def mk(name, width):
+        my_prio = next(vg.prio for vg in policy.vgangs
+                       for m in vg.members if m.name == name)
+
+        def fn(lane, idx):
+            inflight = dict(ex._inflight)
+            if len(set(inflight.values())) > 1:
+                overlap.append(inflight)
+            g = ex.sched.g
+            # budget writes happen under g.lock (gang-change hook), so
+            # leader + budget sampled under it form a consistent pair
+            with g.lock:
+                leader_prio = g.leader.prio if g.leader else None
+                live = sum(1 for t in g.gthreads if t is not None)
+                b = ex.reg.cores[2].budget
+            if leader_prio == my_prio and live == width:
+                if b > floors[my_prio] + 1e-9:
+                    bad.append((name, b))
+            time.sleep(0.002)
+        return fn
+
+    ex = policy.build_executor(
+        {"a1": mk("a1", 2), "a2": mk("a2", 2), "b1": mk("b1", 1)},
+        n_jobs=8)
+    stats = ex.run(1.0)
+    assert overlap == [], overlap
+    assert bad == [], bad
+    assert len(stats["response_times"]["b1"]) == 8
+    assert ex.sched.check_invariant()

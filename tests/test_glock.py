@@ -78,6 +78,92 @@ def test_virtual_gang_same_prio_coschedules():
     assert s.check_invariant()
 
 
+def test_blocked_core_joining_gang_sheds_blocked_bit():
+    """A core blocked at Algorithm 1 line 18-19 that later joins the
+    running gang at equal priority (line 14-15) must drop its blocked
+    bit — otherwise the eventual release sends it a spurious reschedule
+    IPI and inflates ipis_sent."""
+    s = GangScheduler(4)
+    hi, th_hi = mk("hi", (0,), 5)
+    lo, th_lo = mk("lo", (1, 2), 3)
+    mid, th_mid = mk("mid", (1,), 5)       # same prio as hi: joins
+    assert s.pick_next_task_rt(0, None, th_hi[0]) is th_hi[0]
+    assert s.pick_next_task_rt(1, None, th_lo[1]) is None   # blocked
+    assert s.pick_next_task_rt(2, None, th_lo[2]) is None   # blocked
+    assert s.g.blocked_cores == 0b110
+    # core 1 now runs a same-priority thread -> joins the gang
+    assert s.pick_next_task_rt(1, None, th_mid[1]) is th_mid[1]
+    assert s.g.blocked_cores == 0b100, "join must clear the blocked bit"
+    woken = []
+    s.reschedule_cpus = woken.extend
+    s.pick_next_task_rt(0, th_hi[0], None)
+    s.pick_next_task_rt(1, th_mid[1], None)       # last member: release
+    assert not s.g.held_flag
+    # only the still-blocked core 2 gets an IPI — exactly one
+    assert woken == [2]
+    assert s.g.ipis_sent == 1
+
+
+def test_blocked_core_preempting_sheds_blocked_bit():
+    """A blocked core whose runqueue later surfaces a *higher*-priority
+    thread preempts and acquires — it too must shed its blocked bit."""
+    s = GangScheduler(4)
+    mid, th_mid = mk("mid", (0,), 5)
+    lo, th_lo = mk("lo", (1,), 3)
+    hi, th_hi = mk("hi", (1,), 9)
+    s.pick_next_task_rt(0, None, th_mid[0])
+    assert s.pick_next_task_rt(1, None, th_lo[1]) is None   # blocked
+    assert s.g.blocked_cores == 0b10
+    assert s.pick_next_task_rt(1, None, th_hi[1]) is th_hi[1]  # preempt
+    assert s.g.blocked_cores == 0b00
+    woken = []
+    s.reschedule_cpus = woken.extend
+    s.pick_next_task_rt(1, th_hi[1], None)                  # release
+    assert woken == [] and s.g.blocked_cores == 0
+
+
+def test_gang_change_join_and_leave_events():
+    """The hook reports joins (line 14-15) and partial departures, so
+    drivers can re-derive live-member budgets (executor §2.4)."""
+    s = GangScheduler(4)
+    events = []
+    s.on_gang_change = lambda ev, leader: events.append(
+        (ev, leader.name if leader else None))
+    a, th_a = mk("a", (0,), 7)
+    b, th_b = mk("b", (1,), 7)             # same prio: one virtual gang
+    s.pick_next_task_rt(0, None, th_a[0])
+    s.pick_next_task_rt(1, None, th_b[1])
+    assert events == [("acquire", "a"), ("join", "a")]
+    s.pick_next_task_rt(1, th_b[1], None)  # b departs, lock still held
+    assert events[-1] == ("leave", "a")
+    s.pick_next_task_rt(0, th_a[0], None)  # last member: full release
+    assert events[-1] == ("release", None)
+
+
+def test_same_task_requeue_at_quantum_boundary_fires_no_events():
+    """A member re-picked for its next quantum (prev departs, same task
+    immediately re-joins on the same core) must fire neither leave nor
+    join: the member set never changed, and a leave+join flap would
+    transiently lift budget caps derived from the live-member set."""
+    s = GangScheduler(4)
+    events = []
+    s.on_gang_change = lambda ev, leader: events.append(ev)
+    a, th_a = mk("a", (0,), 7)
+    b, th_b = mk("b", (1,), 7)
+    s.pick_next_task_rt(0, None, th_a[0])
+    s.pick_next_task_rt(1, None, th_b[1])
+    assert events == ["acquire", "join"]
+    # quantum boundary: b's thread goes off and straight back on
+    picked = s.pick_next_task_rt(1, th_b[1], th_b[1])
+    assert picked is th_b[1]
+    assert events == ["acquire", "join"]   # no leave/join flap
+    assert s.g.locked_cores == 0b11
+    # a *different* same-prio task replacing prev still reports both
+    c, th_c = mk("c", (1,), 7)
+    s.pick_next_task_rt(1, th_b[1], th_c[1])
+    assert events == ["acquire", "join", "leave", "join"]
+
+
 def test_disabled_passthrough():
     s = GangScheduler(4, enabled=False)
     t1, th1 = mk("t1", (0, 1), 5)

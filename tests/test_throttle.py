@@ -104,6 +104,65 @@ def test_charge_span_accumulates_within_one_window():
         0.75 + (10.0 - 2.25) / 100.0)
 
 
+def test_charge_span_sequential_spans_landing_in_one_window():
+    """Several sequential spans whose tails land in the same regulation
+    window: the window carries exactly the traffic generated since it
+    opened, regardless of how many spans delivered it."""
+    reg = BandwidthRegulator(1, interval=1.0, mode="reactive")
+    reg.set_gang_budget(100.0)
+    reg.charge_span(0, 2.0, 0.2, 1.3)     # crosses into window [1, 2)
+    reg.charge_span(0, 4.0, 1.3, 1.6)     # stays inside [1, 2)
+    reg.charge_span(0, 1.0, 1.6, 1.9)     # stays inside [1, 2)
+    st = reg.cores[0]
+    assert st.window_start == pytest.approx(1.0)
+    # in-window usage: 2.0*0.3 + 4.0*0.3 + 1.0*0.3
+    assert st.used == pytest.approx(0.6 + 1.2 + 0.3)
+    assert st.total_used == pytest.approx(2.0 * 1.1 + 4.0 * 0.3
+                                          + 1.0 * 0.3)
+    # the closed-form trip reflects the accumulated in-window usage
+    assert reg.next_trip_time(0, 1000.0, 1.9) == pytest.approx(
+        1.9 + (100.0 - 2.1) / 1000.0)
+
+
+def test_next_trip_time_after_long_idle_gap():
+    """A trip prediction right after a long idle stretch must jump the
+    window to the one containing ``now`` (stale usage forgotten) and
+    price the budget against a fresh window."""
+    reg = BandwidthRegulator(1, interval=1.0, mode="reactive")
+    reg.set_gang_budget(1.0)
+    reg.charge_span(0, 0.9, 0.0, 1.0)     # old usage, long ago
+    t = reg.next_trip_time(0, 10.0, 57.3)
+    st = reg.cores[0]
+    assert st.window_start == pytest.approx(57.0)
+    assert st.used == pytest.approx(0.0)
+    assert t == pytest.approx(57.3 + 1.0 / 10.0)
+    # a slow rate that cannot exhaust a full window never trips
+    assert reg.next_trip_time(0, 0.5, 57.3) == float("inf")
+
+
+def test_admission_set_core_budgets_stall_lift():
+    """Admission mode: a denial stalls the core to the window end; a
+    per-core budget *raise* lifts the stall immediately (the executor's
+    leave/acquire hand-off path), while a lower or equal budget keeps
+    it. Usage within the window is preserved across the change."""
+    reg = BandwidthRegulator(2, interval=1.0, mode="admission")
+    reg.set_core_budgets({0: 1.0, 1: 1.0})
+    assert reg.charge(0, 0.8, 0.1)
+    assert reg.charge(0, 0.8, 0.15) is False        # denied -> stalled
+    assert reg.is_stalled(0, 0.2)
+    assert reg.charge(1, 0.8, 0.1)
+    assert reg.charge(1, 0.8, 0.15) is False
+    changed = reg.set_core_budgets({0: 5.0, 1: 0.5})
+    assert changed == {0, 1}
+    assert not reg.is_stalled(0, 0.2)               # raise lifts stall
+    assert reg.is_stalled(1, 0.2)                   # cut keeps stall
+    # usage carried: 0.8 already used, 4.2 headroom left this window
+    assert reg.charge(0, 4.0, 0.25)
+    assert reg.charge(0, 0.5, 0.3) is False
+    # the stalled core frees at the window boundary as usual
+    assert not reg.is_stalled(1, 1.05)
+
+
 def test_charge_partial_admits_fraction_then_stalls():
     """Reactive fractional admission: the counter takes the whole
     quantum (hardware overshoot), the caller learns which fraction ran
