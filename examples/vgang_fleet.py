@@ -7,9 +7,13 @@ dispatched as units on JAX lanes through
 enforces min-over-live-member lane budgets, so a best-effort analytics
 filler only moves the bytes the most sensitive co-running member
 tolerates. Pass ``--rtg-throttle`` to switch to RTG-throttle dispatch
-(critical member uncapped, sibling lanes admission-capped).
+(critical member uncapped, sibling lanes admission-capped), and
+``--reclaim`` to add mid-window bandwidth donation on top (DESIGN.md
+§7.5: retired member lanes donate their unspent window quota to gated
+sibling quanta that would otherwise stall).
 
     PYTHONPATH=src python examples/vgang_fleet.py [--rtg-throttle]
+        [--reclaim]
 """
 import argparse
 import time
@@ -39,6 +43,8 @@ def jit_step(n):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rtg-throttle", action="store_true")
+    ap.add_argument("--reclaim", action="store_true",
+                    help="mid-window donation on top of RTG-throttle")
     ap.add_argument("--duration", type=float, default=2.0)
     args = ap.parse_args()
 
@@ -58,13 +64,15 @@ def main():
 
     policy = VirtualGangPolicy(vgangs, n_cores=N_LANES, interference=intf,
                                auto_prio=False,
-                               rtg_throttle=args.rtg_throttle)
+                               rtg_throttle=args.rtg_throttle
+                               or args.reclaim,
+                               reclaim=args.reclaim)
     fns = {"perception": jit_step(96), "fusion": jit_step(112),
            "planner": jit_step(144)}
     ex = policy.build_executor(
         fns, regulation_interval_s=0.010,
         bytes_per_quantum={n: 2e6 for n in fns}
-        if args.rtg_throttle else None)
+        if policy.rtg_throttle else None)
     ex.submit_be(BEJob("analytics", lambda lane: time.sleep(3e-4),
                        lanes=tuple(range(N_LANES)),
                        bytes_per_quantum=5e5))
@@ -74,7 +82,8 @@ def main():
     print(f"gang invariant holds: {ex.sched.check_invariant()}; "
           f"acquisitions={stats['acquisitions']} "
           f"preemptions={stats['preemptions']} "
-          f"rt_stalls={stats['rt_stalls']}")
+          f"rt_stalls={stats['rt_stalls']} "
+          f"reclaimed={stats['reclaimed_bytes']:.3g}")
     for vg in vgangs:
         wcrt = rta[vg.name]["wcrt"]
         bound = "divergent" if wcrt is None else f"{wcrt:.2f} ms"

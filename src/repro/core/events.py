@@ -135,7 +135,8 @@ class EventEngine:
         stall_label: List[Optional[str]] = [None] * n
         be_cands, be_names = sim.be_cands, sim.be_names
         be_rate = sim.be_share_rate
-        mm_epoch = mm.epoch - 1              # force first reconcile sweep
+        reclaim = reg.reclaim
+        mm_epoch = mm.agg_epoch - 1          # force first reconcile sweep
 
         ready: List[list] = [[] for _ in range(n)]
         heap: list = []
@@ -156,6 +157,10 @@ class EventEngine:
             # churn, not lock hand-offs — keep the metric's meaning
             if event in ("acquire", "release", "preempt"):
                 self.handoffs += 1
+            if reclaim and event == "acquire":
+                # donation grants are per-regime: void them the moment
+                # a gang takes the lock (quantum engine does the same)
+                reg.reset_reclaim()
             self._gang_dirty = True
         sched.on_gang_change = _gang_change
 
@@ -305,13 +310,13 @@ class EventEngine:
             actually changed; otherwise only the dirty cores can have a
             new victim."""
             nonlocal mm_epoch
-            if mm.epoch != mm_epoch:
-                mm_epoch = mm.epoch
+            if mm.agg_epoch != mm_epoch:
+                mm_epoch = mm.agg_epoch
                 for c in range(n):
                     th = current[c]
                     if th is None or rt_stalled[c]:
                         continue
-                    s = mm.slowdown(th.task.name)
+                    s = mm.slowdown(th.task.name, c)
                     if s != slow[c]:
                         materialize(c, now)
                         slow[c] = s
@@ -320,7 +325,7 @@ class EventEngine:
                 for c in tuple(push_set):
                     th = current[c]
                     if th is not None and not rt_stalled[c]:
-                        slow[c] = mm.slowdown(th.task.name)
+                        slow[c] = mm.slowdown(th.task.name, c)
 
         # ---- event (re)prediction for dirty cores -------------------
         def push_updates(cores, now: float) -> None:
@@ -445,16 +450,25 @@ class EventEngine:
                     materialize(c, now)
                     st = reg.cores[c]
                     if mm.rates[c] > 0.0 and st.budget != _INF and \
-                            st.used >= st.budget - 1e-6:
-                        mm.trip(c, now)
+                            st.used >= st.limit - 1e-6:
                         th = current[c]
-                        if th is not None:
-                            stall_label[c] = "throttled:" + th.task.name
-                        elif be_cands[c]:
-                            heavy = max(be_cands[c],
-                                        key=lambda b: b.mem_rate)
-                            stall_label[c] = "throttled:" + heavy.name
-                        changed.add(c)
+                        if reclaim and th is not None and \
+                                mm.claim(c, th.task.name, mm.rates[c],
+                                         now) > 0.0:
+                            # donated quota covers (part of) the rest of
+                            # the window: don't trip — the raised limit
+                            # re-pins the trip prediction
+                            changed.add(c)
+                        else:
+                            mm.trip(c, now)
+                            if th is not None:
+                                stall_label[c] = ("throttled:"
+                                                  + th.task.name)
+                            elif be_cands[c]:
+                                heavy = max(be_cands[c],
+                                            key=lambda b: b.mem_rate)
+                                stall_label[c] = "throttled:" + heavy.name
+                            changed.add(c)
                 else:                    # _UNSTALL: pure wakeup
                     changed.add(data)
             if comp:
@@ -479,6 +493,19 @@ class EventEngine:
             if changed:
                 refresh(sorted(changed), now)
                 reconcile(changed, now)
+                if reclaim:
+                    # a donor may have gone idle in this round: retry
+                    # stalled RT threads against the pool (core order —
+                    # the quantum engine's per-step retry order); a
+                    # granted draw lifts the stall and resumes the
+                    # thread at this very instant
+                    lifted = [c for c in range(n)
+                              if rt_stalled[c] and current[c] is not None
+                              and mm.claim_lift(c, current[c].task, now)]
+                    if lifted:
+                        changed.update(lifted)
+                        refresh(lifted, now)
+                        reconcile(set(lifted), now)
                 if profile:
                     timed("rates", t_p, a0)
                     t_p, a0 = perf(), phase_wall["advance"]
@@ -496,4 +523,5 @@ class EventEngine:
             be_progress=be_progress, throttle_events=throttle_events,
             ipis=sched.g.ipis_sent, preemptions=sched.g.preemptions,
             slack_time=slack, horizon=horizon,
-            events=self.events_processed, engine="event")
+            events=self.events_processed, engine="event",
+            reclaimed=reg.total_reclaimed)

@@ -91,13 +91,18 @@ class GangExecutor:
                  regulation_interval_s: float = 0.010,
                  straggler_factor: float = 3.0,
                  backup_dispatch: bool = False,
-                 budget_policy=None):
+                 budget_policy=None, reclaim: bool = False):
         """``budget_policy``: optional object with ``apply(glock,
         regulator)`` — the same interface ``Simulator`` takes
         (vgang/sched.py) — invoked from the gang-change hook to set
         per-lane budgets from the live-member state. ``None`` falls back
         to the paper's rule: the leader's declared budget on every lane
-        the gang does not occupy."""
+        the gang does not occupy.
+
+        ``reclaim``: mid-window bandwidth donation (DESIGN.md §7.5) at
+        admission granularity — a gated sibling quantum that would be
+        denied first draws the unspent window quota of member lanes
+        whose work for this release already retired."""
         self.n_lanes = n_lanes
         self.enabled = enabled
         self.budget_policy = budget_policy
@@ -109,7 +114,7 @@ class GangExecutor:
         self.sched.on_gang_change = self._on_gang_change
         self.reg = BandwidthRegulator(n_lanes,
                                       interval=regulation_interval_s,
-                                      mode="admission")
+                                      mode="admission", reclaim=reclaim)
         self.trace = Trace(n_lanes)
         self.rt_jobs: List[RTJob] = []
         self.be_jobs: List[BEJob] = []
@@ -134,6 +139,11 @@ class GangExecutor:
         self.rt_stalls: Dict[str, int] = {}   # RT quanta delayed by a stall
         self._ema: Dict[str, float] = {}
         self._budget_sig = None     # last glock state budgets derive from
+        # gang prios whose in-flight quanta were still draining when the
+        # current leader's budgets were applied: until they retire, the
+        # enforced regime is the element-wise min over (outgoing,
+        # incoming) — see _apply_budgets / _end_drain
+        self._draining: frozenset = frozenset()
         self._t0 = 0.0
         # lanes currently *executing* an RT quantum -> gang prio. A newly
         # scheduled gang waits for other gangs' in-flight quanta to drain
@@ -230,7 +240,17 @@ class GangExecutor:
         the leave already sees the successor installed) skip the lane
         rescan. The member uids must be part of the signature: that
         same replacement keeps leader and core mask identical while the
-        budget floor moves with the member set."""
+        budget floor moves with the member set.
+
+        Drain-window ordering (ROADMAP item 1): a gang acquiring after
+        a preemption applies its budgets while the outgoing gang's last
+        quanta still drain (no mid-quantum preemption — the preemptor
+        waits at the gang-isolation barrier). Best-effort work admitted
+        under the incoming regime alone would pierce the *outgoing*
+        gang's isolation, so while foreign in-flight quanta remain, the
+        enforced regime is the element-wise min over (budgets before
+        the change, incoming budgets); ``_end_drain`` re-derives the
+        pure incoming regime when the last foreign quantum retires."""
         g = self.sched.g
         sig = (g.held_flag,
                None if g.leader is None else g.leader.uid,
@@ -239,14 +259,66 @@ class GangExecutor:
         if sig == self._budget_sig:
             return
         self._budget_sig = sig
-        if self.budget_policy is not None:
-            self.budget_policy.apply(g, self.reg)
-            return
-        if not g.held_flag or g.leader is None:
-            return
-        occupied = {th.core for th in g.gthreads if th is not None}
-        self.reg.set_core_budgets({c: None for c in occupied},
-                                  default=g.leader.mem_budget)
+
+        def derive(reg):
+            if self.budget_policy is not None:
+                self.budget_policy.apply(g, reg)
+            elif g.held_flag and g.leader is not None:
+                occupied = {th.core for th in g.gthreads
+                            if th is not None}
+                reg.set_core_budgets({c: None for c in occupied},
+                                     default=g.leader.mem_budget)
+
+        # the foreign-in-flight snapshot and the drain publication must
+        # be one atomic step against _quantum_retired (a quantum
+        # retiring in between would miss the _draining flag and never
+        # run _end_drain, pinning the min regime forever), and the min
+        # regime must reach the live regulator in a *single* write:
+        # deriving the incoming regime in place first would expose its
+        # looser budgets to concurrent lock-free BE charges while the
+        # outgoing gang still drains — so it is derived on a shadow
+        # bank and only min(outgoing, incoming) is ever published.
+        with self._lock:
+            draining = frozenset(
+                p for ln, p in self._inflight.items()
+                if g.leader is not None and p != g.leader.prio)
+            if draining:
+                shadow = BandwidthRegulator(
+                    self.n_lanes, interval=self.reg.interval,
+                    mode=self.reg.mode)
+                derive(shadow)
+                self.reg.set_core_budgets(
+                    {c: min(st.budget, shadow.cores[c].budget)
+                     for c, st in self.reg.cores.items()})
+                self._draining = draining
+                # force a clean re-derivation once the drain completes
+                self._budget_sig = None
+        if not draining:
+            derive(self.reg)
+
+    def _end_drain(self) -> None:
+        """The outgoing gang's last foreign in-flight quantum retired:
+        drop the element-wise min regime and re-derive budgets from the
+        live glock state alone."""
+        g = self.sched.g
+        with g.lock:
+            self._budget_sig = None
+            self._apply_budgets()
+        with self._wake:
+            self._wake.notify_all()
+
+    def _quantum_retired(self, lane: int) -> bool:
+        """Remove ``lane`` from the in-flight set (caller does NOT hold
+        the lock); returns True when this retirement completed a
+        drain — the caller must then run ``_end_drain``."""
+        with self._wake:
+            self._inflight.pop(lane, None)
+            drain_done = bool(self._draining) and not any(
+                p in self._draining for p in self._inflight.values())
+            if drain_done:
+                self._draining = frozenset()
+            self._wake.notify_all()
+        return drain_done
 
     def _on_release(self) -> None:
         """Full release: extend the departed gang's *tightest* enforced
@@ -265,6 +337,11 @@ class GangExecutor:
         # budgets while still under g.lock; release floors every lane at
         # the departing gang's regime (conservative hand-off).
         if event in ("acquire", "join", "leave"):
+            if event == "acquire" and self.reg.reclaim:
+                # grants issued under the departing regime must not
+                # leak into the acquiring gang's windows — even when
+                # the budget values happen to coincide
+                self.reg.reset_reclaim()
             self._apply_budgets()
             if event == "leave":
                 # a leave only raises budgets (min over fewer members) —
@@ -377,11 +454,27 @@ class GangExecutor:
                         and g.leader.prio == job.prio):
                     return "requeue", stalled
                 now = self._now()
-                if self.reg.is_stalled(lane, now):
-                    # existing stall (ours or a BE quantum's trip):
-                    # don't re-charge (each denied retry would inflate
-                    # total_denied by a spurious-wakeup-dependent
-                    # factor), just wait it out
+                st = self.reg.cores[lane]
+                stalled_now = self.reg.is_stalled(lane, now)
+                short = st.used + job.bytes_per_quantum - st.limit
+                if self.reg.reclaim and short > 0.0 and \
+                        st.budget != float("inf") and \
+                        self._reclaim_rt_draw(lane, job, short,
+                                              now) >= short:
+                    # mid-window donation (DESIGN.md §7.5): the window
+                    # was topped up from retired member lanes — this
+                    # also lifts an existing stall (the executor
+                    # analogue of the engines' claim_lift: a donor that
+                    # retired after our trip rescues the quantum)
+                    if stalled_now:
+                        self.reg.unstall(lane)
+                    admitted = self.reg.charge(
+                        lane, job.bytes_per_quantum, now)
+                elif stalled_now:
+                    # existing stall (ours or a BE quantum's trip) and
+                    # no covering donation: don't re-charge (each
+                    # denied retry would inflate total_denied by a
+                    # spurious-wakeup-dependent factor), wait it out
                     admitted = False
                 else:
                     admitted = self.reg.charge(
@@ -401,6 +494,44 @@ class GangExecutor:
                 if self._stop:
                     return "stop", stalled
                 self._wake.wait(timeout=min(max(wait, 0.0002), 0.05))
+
+    def _reclaim_rt_draw(self, lane: int, job: RTJob, need: float,
+                         now: float) -> float:
+        """Admission-mode reclaiming (DESIGN.md §2.4/§7.5): draw
+        ``need`` bytes of unspent window quota — all or nothing — from
+        lanes of the running gang's *retired* members: members with no
+        pending work this release and nothing in flight, whose
+        interference dominates the drawing member's for every other
+        member. This is the quota-for-quota half of the engines'
+        exchange gate; the continuous-time offset cap has no admission
+        analogue (the admission-mode analysis prices whole windows, not
+        offsets — the executor bound's extra window slop absorbs the
+        difference, DESIGN.md §2.4). Caller holds ``g.lock``; needs a
+        ``budget_policy`` exposing ``interference``."""
+        pol = self.budget_policy
+        intf = getattr(pol, "interference", None)
+        g = self.sched.g
+        if intf is None or not g.held_flag or g.leader is None:
+            return 0.0
+        members = [j for j in self.rt_jobs if j.prio == g.leader.prio]
+        names = [j.name for j in members]
+        donors = []
+        with self._lock:
+            for m in members:
+                if m.uid == job.uid or not m.lanes:
+                    continue
+                if any(ln in self._inflight for ln in m.lanes):
+                    continue
+                if any(self._active_instance(m, ln) is not None
+                       for ln in m.lanes):
+                    continue            # still has pending work
+                if all(intf(v, job.name) <= intf(v, m.name) + 1e-12
+                       for v in names if v not in (job.name, m.name)):
+                    donors.extend(m.lanes)
+        if not donors:
+            return 0.0
+        return self.reg.draw_from(lane, sorted(donors), need, now,
+                                  require_full=True)
 
     # ------------------------------------------------------------------
     def _worker(self, lane: int):
@@ -456,9 +587,8 @@ class GangExecutor:
                         t_run = self._now()
                         job.fn(lane, inst.index)
                 finally:
-                    with self._wake:
-                        self._inflight.pop(lane, None)
-                        self._wake.notify_all()
+                    if self._quantum_retired(lane):
+                        self._end_drain()
                 if requeue:
                     # the quantum never started: leave the instance
                     # pending and re-enter the scheduler (the preempting
@@ -538,4 +668,5 @@ class GangExecutor:
             "preemptions": self.sched.g.preemptions,
             "acquisitions": self.sched.g.acquisitions,
             "ipis": self.sched.g.ipis_sent,
+            "reclaimed_bytes": self.reg.total_reclaimed,
         }

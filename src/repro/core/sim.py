@@ -71,6 +71,7 @@ class SimResult:
     horizon: float
     events: int = 0                      # event-engine: events processed
     engine: str = "quantum"              # "quantum" (dt-stepped) | "event"
+    reclaimed: float = 0.0               # traffic units drawn from donors
 
     def wcrt(self, name: str) -> float:
         rs = self.response_times.get(name) or [float("nan")]
@@ -107,10 +108,16 @@ class Simulator:
                  throttle_mode: str = "reactive",
                  regulation_interval: float = 1.0,
                  dt: Optional[float] = 0.05,
-                 budget_policy: Optional["BudgetPolicy"] = None):
+                 budget_policy: Optional["BudgetPolicy"] = None,
+                 reclaim: bool = False):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
         same SimResult, O(events) instead of O(horizon/dt).
+
+        ``reclaim``: enable mid-window bandwidth donation (DESIGN.md
+        §7.5): idle cores' unspent window quota is drawn — through the
+        MemoryModel's dominance gate — by RT threads that would
+        otherwise trip, in both engines identically.
 
         ``budget_policy``: optional object with ``apply(glock, regulator)``
         called whenever scheduling settles to set throttle budgets,
@@ -131,7 +138,7 @@ class Simulator:
         self.budget_policy = budget_policy
         self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled)
         self.reg = BandwidthRegulator(n_cores, interval=regulation_interval,
-                                      mode=throttle_mode)
+                                      mode=throttle_mode, reclaim=reclaim)
         self.mm = MemoryModel(n_cores, interference, self.reg)
         self.trace = Trace(n_cores)
         self.profile = False        # event engine: record phase breakdown
@@ -222,6 +229,11 @@ class Simulator:
 
         dirty = set(range(self.n_cores))
         self.sched.reschedule_cpus = lambda cores: dirty.update(cores)
+        if self.reg.reclaim:
+            # donation grants are per-regime: a new gang taking the
+            # lock voids them (same hook instant as the event engine's)
+            self.sched.on_gang_change = lambda event, leader: \
+                self.reg.reset_reclaim() if event == "acquire" else None
 
         for step in range(nsteps):
             now = step * dt
@@ -261,6 +273,16 @@ class Simulator:
                 if mm.refresh_core(c, current[c], be_names[c], be_agg[c],
                                    now):
                     rt_stalled.add(c)
+            if self.reg.reclaim and rt_stalled:
+                # mid-window donation: a stalled RT thread retries the
+                # pool (a donor may have gone idle); a granted draw
+                # lifts the stall and the thread resumes this quantum —
+                # the same instant the event engine resumes it
+                for c in sorted(rt_stalled):
+                    if mm.claim_lift(c, current[c].task, now):
+                        rt_stalled.discard(c)
+                        mm.refresh_core(c, current[c], be_names[c],
+                                        be_agg[c], now)
 
             # ---- advance RT work + best-effort progress ------------------
             for c in range(self.n_cores):
@@ -305,7 +327,7 @@ class Simulator:
                 # budget tripping mid-quantum: the thread pauses mid-job
                 # after the admitted fraction and stays stalled until the
                 # regulation window ends
-                slow = mm.slowdown(th.task.name)
+                slow = mm.slowdown(th.task.name, c)
                 j.remaining[c] = max(0.0, j.remaining[c] - dt * frac / slow)
                 self.trace.record(c, th.task.name, now, now + dt * frac)
                 if frac < 1.0:
@@ -325,4 +347,5 @@ class Simulator:
             throttle_events=throttle_events,
             ipis=self.sched.g.ipis_sent,
             preemptions=self.sched.g.preemptions,
-            slack_time=slack, horizon=horizon)
+            slack_time=slack, horizon=horizon,
+            reclaimed=self.reg.total_reclaimed)

@@ -15,12 +15,35 @@ Two modes (DESIGN.md §7.3):
   (from ``compiled.cost_analysis()``) is admitted only if it fits the
   remaining budget. No overshoot; suits hardware without mid-program
   preemption.
+
+Dynamic reclaiming (``reclaim=True``, DESIGN.md §7.5, after the analysis
+of arXiv:1809.05921): a core that sits idle inside a regulation window
+leaves its unspent quota *donatable*, and a charging core that exhausts
+its own quota may *draw* that quota instead of tripping. The pool is
+pull-based — nothing is banked; ``donatable`` is computed on demand from
+the donor's fresh window state, a draw marks the donor's ``donated``
+counter (so quota is never handed out twice) and credits the drawer's
+``drawn`` counter, and both reset at the window roll. The per-window
+limit a core charges against is therefore
+
+    limit = budget - donated + drawn
+
+Eligibility (who may donate to whom) is policy, not accounting: the
+MemoryModel restricts donors to idle cores and gates draws on an
+interference-dominance rule (memmodel.py); the executor restricts
+donors to lanes with no pending RT work. A budget *decrease* revokes
+the core's unspent reclaimed grant (``drawn`` cleared) and — fixing the
+mid-window lowering bug — stalls the core immediately when its usage
+already exceeds the new limit, instead of letting it overrun until the
+next window roll.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional, Set
+from typing import Dict, Iterable, Optional, Set
+
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -30,20 +53,33 @@ class ThrottleState:
     used: float = 0.0
     window_start: float = 0.0
     stalled_until: float = 0.0
+    # dynamic reclaiming (per-window, reset on roll — DESIGN.md §7.5)
+    donated: float = 0.0         # quota pulled out of this core's window
+    drawn: float = 0.0           # quota granted to this core's window
     # instrumentation
     throttle_events: int = 0
     total_used: float = 0.0
     total_denied: float = 0.0
+
+    @property
+    def limit(self) -> float:
+        """Effective per-window allowance: the enforced budget minus what
+        this core donated plus what it drew from donors."""
+        if self.budget == _INF:
+            return _INF
+        return self.budget - self.donated + self.drawn
 
 
 class BandwidthRegulator:
     """Per-core regulator bank; budget is set by the running gang."""
 
     def __init__(self, n_cores: int, interval: float = 1.0,
-                 mode: str = "reactive"):
+                 mode: str = "reactive", reclaim: bool = False):
         assert mode in ("reactive", "admission")
         self.mode = mode
         self.interval = interval
+        self.reclaim = reclaim
+        self.total_reclaimed = 0.0   # units drawn from donors, lifetime
         self.cores: Dict[int, ThrottleState] = {
             c: ThrottleState(budget=float("inf"), interval=interval)
             for c in range(n_cores)}
@@ -66,7 +102,16 @@ class BandwidthRegulator:
 
         Returns the cores whose regime actually changed (budget moved or
         a stall was lifted) — the event engine folds exactly these into
-        its dirty-core set instead of rescanning every core."""
+        its dirty-core set instead of rescanning every core.
+
+        Mid-window lowering: a cut below the core's already-consumed
+        usage takes effect *immediately* — ``is_stalled`` treats
+        ``used > limit`` as a trip the moment it is next consulted (both
+        engines consult it right after truing up the core's usage), so
+        the core cannot overrun the new regime until the next
+        ``_roll_window``. A decrease also revokes any unspent reclaimed
+        grant (``drawn``): the stricter incoming regime wins over quota
+        donated under the old one."""
         changed: Set[int] = set()
         with self._lock:
             for c, st in self.cores.items():
@@ -76,6 +121,8 @@ class BandwidthRegulator:
                     continue
                 if b > st.budget and st.stalled_until > 0.0:
                     st.stalled_until = 0.0
+                if b < st.budget:
+                    st.drawn = 0.0
                 st.budget = b
                 changed.add(c)
         return changed
@@ -87,6 +134,8 @@ class BandwidthRegulator:
             # after a long idle gap; every skipped window resets usage)
             st.window_start += int(delta / st.interval) * st.interval
             st.used = 0.0
+            st.donated = 0.0
+            st.drawn = 0.0
 
     def charge(self, core: int, amount: float, now: float) -> bool:
         """Account ``amount`` of traffic at time ``now``.
@@ -114,8 +163,9 @@ class BandwidthRegulator:
         if now < st.stalled_until:
             st.total_denied += amount
             return 0.0
+        limit = st.limit
         if self.mode == "admission":
-            if st.used + amount > st.budget:
+            if st.used + amount > limit:
                 st.throttle_events += 1
                 st.total_denied += amount
                 st.stalled_until = st.window_start + st.interval
@@ -126,18 +176,31 @@ class BandwidthRegulator:
         before = st.used
         st.used += amount
         st.total_used += amount
-        if st.used > st.budget:
+        if st.used > limit:
             st.throttle_events += 1
             st.stalled_until = st.window_start + st.interval
             if amount <= 0.0:
                 return 0.0
-            return max(0.0, min(1.0, (st.budget - before) / amount))
+            return max(0.0, min(1.0, (limit - before) / amount))
         return 1.0
 
     def is_stalled(self, core: int, now: float) -> bool:
+        """Whether ``core`` may not run at ``now``. Usage above the
+        current per-window limit counts as stalled even without an
+        explicit trip — that is how a mid-window budget cut below the
+        already-consumed quota (or a revoked reclaim grant) takes hold
+        immediately; the implicit state is converted to an explicit
+        stall-until-window-end here (counted once as a throttle event),
+        so window-boundary wakeup predictions see it."""
         st = self.cores[core]
         self._roll_window(st, now)
-        return now < st.stalled_until
+        if now < st.stalled_until:
+            return True
+        if st.used > st.limit + 1e-12:
+            st.throttle_events += 1
+            st.stalled_until = st.window_start + st.interval
+            return True
+        return False
 
     def next_release(self, core: int, now: float) -> float:
         st = self.cores[core]
@@ -173,15 +236,20 @@ class BandwidthRegulator:
 
     def next_trip_time(self, core: int, rate: float, now: float) -> float:
         """Absolute time at which continuous traffic at ``rate`` exceeds the
-        budget, assuming the rate holds; inf if it never does. Exactly
-        reaching the budget at a window boundary does not trip (usage never
-        *exceeds* the budget)."""
+        per-window limit, assuming the rate holds; inf if it never does.
+        Exactly reaching the limit at a window boundary does not trip
+        (usage never *exceeds* it). Under reclaiming the current window's
+        limit includes the pool draw already granted to this core
+        (``drawn``) minus what it donated; a prediction crossing into the
+        next window prices the plain budget (both counters reset at the
+        roll, and future donations only *raise* the limit, so the
+        prediction is re-derived at the trip event, never missed)."""
         st = self.cores[core]
         self._roll_window(st, now)
         if st.budget == float("inf") or rate <= 0.0:
             return float("inf")
         we = st.window_start + st.interval
-        t = now + max(0.0, st.budget - st.used) / rate
+        t = now + max(0.0, st.limit - st.used) / rate
         if t < we - 1e-12:
             return t
         if st.budget / rate < st.interval - 1e-12:
@@ -195,3 +263,78 @@ class BandwidthRegulator:
         self._roll_window(st, now)
         st.throttle_events += 1
         st.stalled_until = st.window_start + st.interval
+
+    # ---- dynamic reclaiming (DESIGN.md §7.5) -------------------------
+    # Pure accounting: eligibility (which cores may donate, which
+    # occupants may draw) is decided by the caller — the MemoryModel for
+    # the simulator engines, the executor for lanes.
+
+    def donatable(self, core: int, now: float) -> float:
+        """Unspent quota of ``core``'s current window that a donor scan
+        may hand out: limit - used, for finite budgets only (an
+        unthrottled core has no meaningful quota to give)."""
+        st = self.cores[core]
+        self._roll_window(st, now)
+        if st.budget == _INF:
+            return 0.0
+        return max(0.0, st.limit - st.used)
+
+    def draw_from(self, core: int, donors: Iterable[int], need: float,
+                  now: float, require_full: bool = False) -> float:
+        """Pull up to ``need`` units out of ``donors``' windows (scanned
+        in the given order — callers pass core order, which both engines
+        and the analysis replicate) and grant them to ``core``'s window.
+        Returns the amount actually drawn; 0 when reclaiming is off.
+
+        ``require_full``: draw nothing unless the donors can cover the
+        whole ``need`` — an admission-mode caller gains nothing from a
+        partial grant (the quantum is still denied whole), while the
+        donors would lose the quota for the rest of the window."""
+        if not self.reclaim or need <= 0.0:
+            return 0.0
+        got = 0.0
+        with self._lock:
+            donors = [d for d in donors if d != core]
+            if require_full:
+                avail = sum(self.donatable(d, now) for d in donors)
+                if avail < need - 1e-15:
+                    return 0.0
+            for d in donors:
+                got += self._transfer(d, core, need - got, now)
+                if got >= need - 1e-15:
+                    break
+        return got
+
+    def _transfer(self, donor: int, drawer: int, amount: float,
+                  now: float) -> float:
+        """Move up to ``amount`` of ``donor``'s unspent window quota to
+        ``drawer``'s window — the one place the donation invariant
+        (donor ``donated`` marked so quota is never handed out twice,
+        drawer ``drawn`` credited, ``total_reclaimed`` accounted) is
+        maintained; ``draw_from`` and MemoryModel.claim both route
+        through it. Returns the amount moved."""
+        take = min(self.donatable(donor, now), amount)
+        if take <= 0.0:
+            return 0.0
+        self.cores[donor].donated += take
+        st = self.cores[drawer]
+        self._roll_window(st, now)
+        st.drawn += take
+        self.total_reclaimed += take
+        return take
+
+    def unstall(self, core: int) -> None:
+        """Lift ``core``'s stall (a reclaim draw restored its quota)."""
+        self.cores[core].stalled_until = 0.0
+
+    def reset_reclaim(self) -> None:
+        """Void every core's window donation state. Drivers call this on
+        each gang-lock *acquire*: grants and donation marks belong to
+        the regime that issued them, and an incoming gang whose budget
+        values happen to equal the old ones would otherwise inherit
+        them (``set_core_budgets`` diffs values and cannot see the
+        leadership change)."""
+        with self._lock:
+            for st in self.cores.values():
+                st.donated = 0.0
+                st.drawn = 0.0

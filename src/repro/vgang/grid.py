@@ -11,14 +11,19 @@ Grid axes:
   — note plain RT-Gang can never accept a set above 1.0, while packed
   virtual gangs can, which is the entire point of the follow-up paper);
 * policy: ``rtgang`` (singletons = the baseline), the formation
-  heuristics ``ffd``, ``bestfit``, ``intfaware`` (formation.py), and
+  heuristics ``ffd``, ``bestfit``, ``intfaware`` (formation.py),
   ``rtgT`` — RTG-throttle (arXiv:1912.10959 §IV-C): interference-aware
   formation dispatched with per-member bandwidth regulation (critical
   member unthrottled, siblings capped; sched.py) and priced by the
   duty-cycle RTA bound (rta.accepts_rtg_throttle). Its curve shows the
   cost of intra-gang isolation: it trails ``intfaware`` where sibling
   stalls stretch the gang, and protects the critical member's WCET in
-  exchange.
+  exchange. ``rtgT+dr`` adds dynamic reclaiming (DESIGN.md §7.5): a
+  sibling finishing its job mid-window donates its unspent quota to
+  stalled co-siblings, and acceptance is priced by
+  min(static, reclaim_wcet) — the exchange gate keeps the static bound
+  sound under donation, so this column dominates ``rtgT`` at every
+  utilization level while recovering part of the isolation cost.
 
 Per (M, dist, util) cell — one batched worker process per cell, like the
 per-level batching of launch/sweep.py --schedulability — n random
@@ -62,6 +67,9 @@ from repro.vgang.sched import VirtualGangPolicy
 # priced by the per-window duty-cycle RTA (rta.accepts_rtg_throttle) —
 # not a formation heuristic, so it is handled apart from HEURISTICS
 RTG_COLUMN = "rtgT"
+# ... and the same dispatch with dynamic reclaiming (policy reclaim=True,
+# RTA reclaim=True): mid-window donation of completed siblings' quota
+RECLAIM_COLUMN = "rtgT+dr"
 
 OUT_DEFAULT = os.path.join(ROOT, "results", "vgang")
 
@@ -115,9 +123,10 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
                            bool, int, float, float]) -> Dict:
     """Pool worker: one (cores, dist, util) cell — all n tasksets, all
     heuristics, in one process (batched, as in sweep._sched_level)."""
-    (seed, n_cores, dist, util, n_sets, heuristics, rtg, sim_check, gamma,
-     cycles) = args
-    columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ())
+    (seed, n_cores, dist, util, n_sets, heuristics, rtg, rtg_dr,
+     sim_check, gamma, cycles) = args
+    columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ()) \
+        + ((RECLAIM_COLUMN,) if rtg_dr else ())
     accept = {h: 0 for h in columns}
     sim_accept = {h: 0 for h in columns}
     sim_n = 0
@@ -135,9 +144,13 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         check_sim = k < sim_check
         if check_sim:
             sim_n += 1
-        if rtg:
-            formed[RTG_COLUMN] = formed.get("intfaware") or \
+        if rtg or rtg_dr:
+            packed = formed.get("intfaware") or \
                 HEURISTICS["intfaware"](tasks, n_cores, intf)
+            if rtg:
+                formed[RTG_COLUMN] = packed
+            if rtg_dr:
+                formed[RECLAIM_COLUMN] = packed
         base_util = total_vgang_utilization(formed["rtgang"], intf)
         best_util = min(total_vgang_utilization(formed[h], intf)
                         for h in formed)
@@ -147,15 +160,18 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
             # one-gang-at-a-time: only same-vgang members ever co-run, so
             # intf only enters through each vgang's inflated WCET (and
             # inflates nothing for the rtgang singleton baseline); the
-            # rtgT column prices sibling regulation on top of that
-            is_rtg = h == RTG_COLUMN
-            rta_ok = accepts_rtg_throttle(vgangs, intf) if is_rtg \
-                else accepts(vgangs, intf)
+            # rtgT column prices sibling regulation on top of that, and
+            # rtgT+dr the reclaiming dispatch (min(static, reclaim))
+            is_rtg = h in (RTG_COLUMN, RECLAIM_COLUMN)
+            is_dr = h == RECLAIM_COLUMN
+            rta_ok = accepts_rtg_throttle(vgangs, intf, reclaim=is_dr) \
+                if is_rtg else accepts(vgangs, intf)
             accept[h] += rta_ok
             if check_sim:
                 policy = VirtualGangPolicy(vgangs, n_cores, intf,
                                            auto_prio=False,
-                                           rtg_throttle=is_rtg)
+                                           rtg_throttle=is_rtg,
+                                           reclaim=is_dr)
                 horizon = cycles * max(t.period for t in tasks)
                 r = policy.simulate(horizon)
                 sim_ok = sum(r.deadline_misses.values()) == 0
@@ -179,7 +195,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
                                        1.6, 2.0),
              heuristics: Sequence[str] = ("ffd", "bestfit", "intfaware",
-                                          RTG_COLUMN),
+                                          RTG_COLUMN, RECLAIM_COLUMN),
              n_per_cell: int = 50, sim_check: int = 2, gamma: float = 0.5,
              cycles: float = 20.0, seed: int = 0,
              processes: Optional[int] = None,
@@ -189,15 +205,18 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
     # the singleton baseline is always evaluated under its curve label
     # "rtgang"; accept (and drop) it here so `--heuristics rtgang,ffd`
     # means what it reads as; "rtgT" selects the RTG-throttle policy
-    # column (interference-aware formation + member regulation)
+    # column (interference-aware formation + member regulation) and
+    # "rtgT+dr" the same dispatch with dynamic reclaiming
     rtg = RTG_COLUMN in heuristics
+    rtg_dr = RECLAIM_COLUMN in heuristics
     heuristics = tuple(h for h in heuristics
-                       if h not in ("rtgang", RTG_COLUMN))
+                       if h not in ("rtgang", RTG_COLUMN, RECLAIM_COLUMN))
     unknown = [h for h in heuristics if h not in HEURISTICS]
     if unknown:
         raise ValueError(f"unknown heuristics {unknown}; known: rtgang, "
-                         f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}")
-    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), rtg,
+                         f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}, "
+                         f"{RECLAIM_COLUMN}")
+    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), rtg, rtg_dr,
               sim_check, gamma, cycles)
              for m in cores for d in dists for u in utils]
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
@@ -212,7 +231,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
     summary = {"seed": seed, "gamma": gamma, "cycles": cycles,
                "n_per_cell": n_per_cell, "sim_check": sim_check,
                "heuristics": ["rtgang", *heuristics] +
-                             ([RTG_COLUMN] if rtg else []),
+                             ([RTG_COLUMN] if rtg else []) +
+                             ([RECLAIM_COLUMN] if rtg_dr else []),
                "utils": list(utils),
                "soundness_violations": sum(r["soundness_violations"]
                                            for r in results),
@@ -257,7 +277,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--cores", default="4,8,16")
     ap.add_argument("--dists", default="light,mixed,heavy")
     ap.add_argument("--utils", default="0.4,0.7,0.9,1.0,1.1,1.2,1.4,1.6,2.0")
-    ap.add_argument("--heuristics", default="ffd,bestfit,intfaware,rtgT")
+    ap.add_argument("--heuristics",
+                    default="ffd,bestfit,intfaware,rtgT,rtgT+dr")
     ap.add_argument("--n", type=int, default=50)
     ap.add_argument("--sim-check", type=int, default=2)
     ap.add_argument("--gamma", type=float, default=0.5)
@@ -269,7 +290,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.smoke:
         args.cores, args.dists = "4", "mixed"
-        args.utils, args.heuristics = "0.8,1.6", "ffd,intfaware,rtgT"
+        args.utils = "0.8,1.6"
+        args.heuristics = "ffd,intfaware,rtgT,rtgT+dr"
         args.n, args.sim_check = 10, 1
 
     out = run_grid(

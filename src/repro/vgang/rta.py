@@ -17,7 +17,7 @@ float equality.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gang import RTTask
 from repro.core import rta as core_rta
@@ -184,10 +184,226 @@ def _stall_prone(vg: VirtualGang, interference: PairwiseInterference,
     return any(q < interval - 1e-12 for q in run.values())
 
 
+# ---------------------------------------------------------------------
+# Dynamic reclaiming (DESIGN.md §7.5 / §9.3.2, after arXiv:1809.05921's
+# analysis of dynamic regulation): a sibling that finishes its job
+# mid-window leaves its per-window grant donatable, and a stalled
+# co-sibling draws it — donor by donor, each drawn unit confined to the
+# donor's own static window and factor-dominated by the donor (the
+# engines' exchange gate, memmodel.py). The gate keeps the *static*
+# duty-cycle bound sound under reclaiming; the bound below additionally
+# tracks bounded completions and guaranteed donations for a usually
+# tighter verdict. ``schedulable_rtg_throttle(..., reclaim=True)``
+# prices min(static, reclaim) — both are sound for the reclaiming
+# dispatch, so the rtgT+dr acceptance dominates plain rtgT.
+# ---------------------------------------------------------------------
+
+
+def _member_cores(vg: VirtualGang) -> Dict[str, range]:
+    """The remapped core block of each member (vgang/sched.remap_members
+    packs members onto consecutive cores in member order) — the engines'
+    donor/drawer scan order, which the greedy below replicates."""
+    out, cursor = {}, 0
+    for m in vg.members:
+        out[m.name] = range(cursor, cursor + m.n_threads)
+        cursor += m.n_threads
+    return out
+
+
+def _reclaim_extensions(vg: VirtualGang,
+                        interference: PairwiseInterference,
+                        interval: float, Q: float,
+                        run: Dict[str, float],
+                        donors: Sequence[RTTask],
+                        drawers: Sequence[RTTask],
+                        victims: Sequence[RTTask]) -> Dict[str, float]:
+    """Per-window unstalled time of each drawer after greedy donation:
+    drawers claim in trip-offset order (ties: core order), donor cores
+    scanned in core order, each donor funding only the sub-span inside
+    its occupant's static window [0, Q / r_donor). A drawer's effective
+    extension is the worst over its cores (its job waits for the
+    slowest thread) — the engines' draw schedule in the window-aligned
+    regime.
+
+    The two gates point in opposite conservative directions: pool
+    *consumption* ignores the dominance filter entirely (the runtime
+    gate only checks the victims actually present, so a competitor the
+    full-member check would block may still drain the pool first),
+    while a drawer is *credited* extension only while contiguously
+    funded by donors that dominate it over every ``victim`` — a
+    superset of any runtime victim set, so credited draws never exceed
+    actual ones even under contention."""
+    cores = _member_cores(vg)
+    # donor pool: (core, avail, offset cap, donor task), core order
+    pool = []
+    for o in sorted(donors, key=lambda m: cores[m.name].start):
+        r_o = o.traffic_rate
+        q_o = interval if r_o <= 0.0 else min(interval, Q / r_o)
+        for c in cores[o.name]:
+            pool.append([c, Q, q_o, o])
+    covers: Dict[Tuple[str, str], bool] = {}
+
+    def dominated(s: RTTask, o: RTTask) -> bool:
+        key = (s.name, o.name)
+        hit = covers.get(key)
+        if hit is None:
+            hit = all(interference(v.name, s.name)
+                      <= interference(v.name, o.name) + 1e-12
+                      for v in victims if v.name not in (s.name, o.name))
+            covers[key] = hit
+        return hit
+
+    u = {m.name: run[m.name] for m in drawers}
+    order = sorted((m for m in drawers if run[m.name] < interval - 1e-12
+                    and m.traffic_rate > 0.0),
+                   key=lambda m: (run[m.name], cores[m.name].start))
+    for s in order:
+        r_s = s.traffic_rate
+        worst = interval
+        for _ in cores[s.name]:          # each thread-core draws alone
+            covered = run[s.name]
+            credit = covered
+            credit_open = True
+            for entry in pool:
+                c, avail, q_o, o = entry
+                if avail <= 0.0 or q_o <= covered + 1e-15:
+                    continue
+                take = min(avail, r_s * (q_o - covered))
+                entry[1] -= take
+                covered += take / r_s
+                if credit_open and dominated(s, o):
+                    credit = covered
+                else:
+                    credit_open = False   # gap: credit must stay
+                                          # contiguous from run[s]
+                if covered >= interval - 1e-15:
+                    break
+            worst = min(worst, credit)
+        u[s.name] = worst
+    return u
+
+
+def _window_work(m: RTTask, present: Dict[str, float], u_m: float,
+                 interference: PairwiseInterference
+                 ) -> Tuple[float, List[Tuple[float, float]]]:
+    """Work member ``m`` completes per window when unstalled over
+    [0, u_m) against co-members present over [0, present[o]): piecewise
+    integral of 1/s(t), plus the profile for finish-offset pricing."""
+    cuts = sorted({min(p, u_m) for o, p in present.items()} | {u_m})
+    profile: List[Tuple[float, float]] = []
+    t_prev = 0.0
+    for b in cuts:
+        if b <= t_prev + 1e-15:
+            continue
+        s = 1.0
+        for o, p in present.items():
+            if p > t_prev + 1e-15:
+                f = interference(m.name, o)
+                if f > s:
+                    s = f
+        profile.append((b - t_prev, s))
+        t_prev = b
+    return sum(d / s for d, s in profile), profile
+
+
+def reclaim_wcet(vg: VirtualGang,
+                 interference: PairwiseInterference = no_interference,
+                 interval: float = 1.0) -> float:
+    """Stand-alone completion bound of a virtual gang under RTG-throttle
+    *with dynamic reclaiming* (inf = some member can never finish).
+
+    Window-phase iteration: members complete one at a time (in bound
+    order); within a phase the per-window schedule is constant, so the
+    number of windows to the next completion is closed-form. Per phase:
+
+    * progress — an alive capped member is guaranteed its static run
+      q_m plus the greedy donation extension funded by *completed*
+      members' cores (actual completions happen no later than the bound,
+      so actual donors appear no later than assumed; dominance is
+      checked against every member — a superset of the runtime victim
+      set — so credited draws never exceed actual ones);
+    * interference — an alive co-member is priced as present over its
+      *supremum* extension (every other member's full grant offered to
+      it, no dominance filter): whatever phase the real system is in,
+      its extension never exceeds that, and completed members drop out
+      of the profile only once their bounded completion has passed.
+
+    Sound against the engines in the same window-aligned regime as
+    ``rtg_throttle_wcet``; preemption realignment is priced by the same
+    per-hp-job window surcharge in ``schedulable_rtg_throttle``."""
+    members = list(vg.members)
+    if len(members) == 1:
+        return vg.inflated_wcet(interference)
+    crit = critical_member(vg, interference)
+    Q = rtg_sibling_budget(vg, interference, interval)
+    run = _window_runtimes(vg, interference, interval)
+    # supremum extension per member: everyone else's grant offered to it
+    u_sup: Dict[str, float] = {}
+    for m in members:
+        if run[m.name] >= interval - 1e-12:
+            u_sup[m.name] = interval
+            continue
+        # realizable supremum: every sibling grant offered to it alone,
+        # no dominance filter (the critical member's core is uncapped
+        # and can never donate, so it is not a donor here either)
+        others = [o for o in members if o is not m and o is not crit]
+        u_sup[m.name] = _reclaim_extensions(
+            vg, interference, interval, Q, run,
+            donors=others, drawers=[m], victims=[])[m.name]
+    remaining = {m.name: gang_wcet(m) for m in members}
+    alive = list(members)
+    completion: Dict[str, float] = {}
+    t = 0.0
+    while alive:
+        done = [m for m in members if m.name in completion]
+        drawers = [m for m in alive if m is not crit]
+        u_grt = _reclaim_extensions(
+            vg, interference, interval, Q, run,
+            donors=[m for m in done if m is not crit],
+            drawers=drawers, victims=members)
+        best = None
+        phase_work: Dict[str, float] = {}
+        for m in alive:
+            u_m = interval if (m is crit or
+                               run[m.name] >= interval - 1e-12) \
+                else u_grt[m.name]
+            present = {o.name: u_sup[o.name] for o in alive if o is not m}
+            work, profile = _window_work(m, present, u_m, interference)
+            phase_work[m.name] = work
+            if work <= 1e-12:
+                continue
+            need = remaining[m.name]
+            full = int((need - 1e-12) / work)
+            rem = need - full * work
+            offset = 0.0
+            for d, s in profile:
+                seg = d / s
+                if rem <= seg + 1e-15:
+                    offset += rem * s
+                    break
+                rem -= seg
+                offset += d
+            row = (full + 1, offset, m)
+            if best is None or (row[0], row[1]) < (best[0], best[1]):
+                best = row
+        if best is None:
+            return float("inf")
+        k, offset, m = best
+        completion[m.name] = t + (k - 1) * interval + offset
+        for o in alive:
+            if o is not m:
+                remaining[o.name] = max(
+                    0.0, remaining[o.name] - k * phase_work[o.name])
+        t += k * interval
+        alive.remove(m)
+    return max(completion.values())
+
+
 def schedulable_rtg_throttle(
         vgangs: Sequence[VirtualGang],
         interference: PairwiseInterference = no_interference,
-        interval: float = 1.0, blocking: float = 0.0) -> Dict[str, Dict]:
+        interval: float = 1.0, blocking: float = 0.0,
+        reclaim: bool = False) -> Dict[str, Dict]:
     """Per-vgang response times under RTG-throttle dispatch: the RT-Gang
     single-core transform with ``rtg_throttle_wcet`` standing in for the
     inflated WCET. Preemptions realign members to mid-window resumes
@@ -196,7 +412,14 @@ def schedulable_rtg_throttle(
     higher-priority vgang causes at most one preemption machine-wide,
     so a per-hp-job ``crpd = interval`` (plus one initial window on the
     analyzed gang) prices all realignment waste. Vgangs no member of
-    which can ever stall skip that surcharge."""
+    which can ever stall skip that surcharge.
+
+    ``reclaim=True`` prices the reclaiming dispatch
+    (``VirtualGangPolicy(rtg_throttle=True, reclaim=True)``): the
+    per-window WCET becomes ``min(rtg_throttle_wcet, reclaim_wcet)`` —
+    the engines' exchange gate keeps the static bound sound under
+    donation, and the reclaim bound is sound by construction, so the
+    tighter of the two holds and rtgT+dr acceptance dominates rtgT."""
     prios = [vg.prio for vg in vgangs]
     if len(set(prios)) != len(prios):
         raise ValueError(
@@ -217,8 +440,13 @@ def schedulable_rtg_throttle(
             raise ValueError(
                 f"RTG-throttle RTA needs zero release offsets: vgang "
                 f"{vg.name!r} members carry offsets {off}")
-    eq = [RTTask(name=vg.name,
-                 wcet=rtg_throttle_wcet(vg, interference, interval),
+    def wcet_of(vg: VirtualGang) -> float:
+        w = rtg_throttle_wcet(vg, interference, interval)
+        if reclaim:
+            w = min(w, reclaim_wcet(vg, interference, interval))
+        return w
+
+    eq = [RTTask(name=vg.name, wcet=wcet_of(vg),
                  period=vg.period, cores=tuple(range(max(1, vg.width))),
                  prio=vg.prio, mem_budget=vg.mem_budget)
           for vg in vgangs]
@@ -239,8 +467,11 @@ def schedulable_rtg_throttle(
 def accepts_rtg_throttle(
         vgangs: Sequence[VirtualGang],
         interference: PairwiseInterference = no_interference,
-        interval: float = 1.0, blocking: float = 0.0) -> bool:
-    """Single-bit RTG-throttle admission verdict for the grid."""
+        interval: float = 1.0, blocking: float = 0.0,
+        reclaim: bool = False) -> bool:
+    """Single-bit RTG-throttle admission verdict for the grid
+    (``reclaim=True``: the rtgT+dr column)."""
     res = schedulable_rtg_throttle(vgangs, interference,
-                                   interval=interval, blocking=blocking)
+                                   interval=interval, blocking=blocking,
+                                   reclaim=reclaim)
     return all(v["ok"] for v in res.values())

@@ -74,7 +74,8 @@ class VirtualGangPolicy:
 
     def __init__(self, vgangs: Sequence[VirtualGang], n_cores: int,
                  interference: PairwiseInterference = no_interference,
-                 auto_prio: bool = True, rtg_throttle: bool = False):
+                 auto_prio: bool = True, rtg_throttle: bool = False,
+                 reclaim: bool = False):
         prios = [vg.prio for vg in vgangs]
         if auto_prio and len(set(prios)) != len(prios):
             vgangs = assign_priorities(vgangs)
@@ -82,6 +83,9 @@ class VirtualGangPolicy:
         self.n_cores = n_cores
         self.interference = interference
         self.rtg_throttle = rtg_throttle
+        # mid-window donation (DESIGN.md §7.5): completed sibling cores
+        # keep their per-window grant so stalled co-siblings can draw it
+        self.reclaim = reclaim
         for vg in self.vgangs:
             if vg.width > n_cores:
                 raise ValueError(f"virtual gang {vg.name!r} needs "
@@ -93,6 +97,10 @@ class VirtualGangPolicy:
         self._members: List[RTTask] = []
         self._budget: Dict[int, float] = {}       # member uid -> budget
         self._critical: Dict[int, int] = {}       # vgang prio -> member uid
+        # vgang prio -> remapped core footprint of its sibling members
+        # (reclaim: a completed sibling's cores keep the cap so their
+        # unspent window quota stays donatable)
+        self._sibling_cores: Dict[int, tuple] = {}
         # (vgang prio, regulation interval) -> sibling cap: the headroom
         # fallback scales with the interval, and one policy object may
         # drive both a simulator (interval in sim-ms) and an executor
@@ -103,9 +111,13 @@ class VirtualGangPolicy:
                 vg, self.interference).uid
         for vg in self.vgangs:
             # members of one virtual gang release together (one unit)
+            sib_cores = []
             for member in remap_members(vg):
                 self._members.append(member)
                 self._budget[member.uid] = member.mem_budget
+                if member.uid != self._critical[vg.prio]:
+                    sib_cores.extend(member.cores)
+            self._sibling_cores[vg.prio] = tuple(sib_cores)
 
     # ---- taskset --------------------------------------------------------
     def taskset(self) -> List[RTTask]:
@@ -145,6 +157,13 @@ class VirtualGangPolicy:
             per_core = {th.core: (None if th.task.uid == crit_uid
                                   else cap)
                         for th in g.gthreads if th is not None}
+            if self.reclaim:
+                # a completed sibling's cores keep the cap: the static
+                # bound granted them Q per window, and that unspent
+                # grant is exactly what the donation pool hands to
+                # stalled co-siblings (DESIGN.md §7.5)
+                for c in self._sibling_cores[vg.prio]:
+                    per_core.setdefault(c, cap)
             return reg.set_core_budgets(per_core,
                                         default=min(floor, cap))
         return reg.set_core_budgets({c: None for c in occupied},
@@ -160,7 +179,8 @@ class VirtualGangPolicy:
         return Simulator(self.n_cores, self.taskset(), be_tasks=be_tasks,
                          interference=interference or self.interference,
                          rt_gang_enabled=True, dt=dt,
-                         budget_policy=self, **kwargs)
+                         budget_policy=self, reclaim=self.reclaim,
+                         **kwargs)
 
     def simulate(self, horizon: float, **kwargs) -> SimResult:
         return self.build_simulator(**kwargs).run(horizon)
@@ -188,7 +208,7 @@ class VirtualGangPolicy:
         from repro.core.executor import GangExecutor
         ex = GangExecutor(
             self.n_cores if n_lanes is None else n_lanes,
-            budget_policy=self, **kwargs)
+            budget_policy=self, reclaim=self.reclaim, **kwargs)
         for vg in self.vgangs:
             ex.submit_vgang(vg, fns, n_jobs=n_jobs,
                             time_scale=time_scale,

@@ -91,6 +91,72 @@ def test_budget_persists_across_release_until_next_acquire():
 
 
 # ---------------------------------------------------------------------
+# drain-window budgets (ROADMAP item 1): element-wise min over the
+# (outgoing, incoming) regimes until the outgoing gang's last in-flight
+# quantum retires
+# ---------------------------------------------------------------------
+
+def test_drain_window_applies_min_over_outgoing_and_incoming():
+    """Pins the budget-ordering trace across a preemption with a
+    draining quantum: tight gang A (budget 5) has a quantum in flight on
+    lane 0 when loose gang B (budget 1e9) preempts from lane 1. The old
+    code applied B's budget fleet-wide at the acquire — best-effort
+    work admitted at 1e9 bytes while A still executed pierced A's
+    isolation. Fixed code enforces min(outgoing, incoming) = 5 on every
+    lane until A's quantum retires, then re-derives B's pure regime."""
+    ex = GangExecutor(n_lanes=3, regulation_interval_s=0.01)
+    a = RTJob("A", _sleep_fn(0.001), lanes=(0,), prio=1,
+              budget_bytes=5.0, n_jobs=1)
+    b = RTJob("B", _sleep_fn(0.001), lanes=(1,), prio=9,
+              budget_bytes=1e9, n_jobs=1)
+    ex.submit_rt(a)
+    ex.submit_rt(b)
+    ex._release_jobs()
+    picked_a = ex.sched.pick_next_task_rt(0, None, ex._threads[(a.uid, 0)])
+    assert picked_a is not None
+    with ex._lock:
+        ex._inflight[0] = a.prio          # A's quantum starts draining
+    assert ex.reg.cores[2].budget == pytest.approx(5.0)
+
+    ex.sched.pick_next_task_rt(1, None, ex._threads[(b.uid, 1)])  # preempt
+    assert ex.sched.g.leader is ex._tasks[b.uid]
+    # drain active: the incoming regime is floored by the outgoing one
+    # on the best-effort lane (lane 0 is still executing A's quantum;
+    # its enforced value only matters once the drain ends)
+    assert ex._draining == frozenset({a.prio})
+    assert ex.reg.cores[2].budget == pytest.approx(5.0)
+
+    # A's quantum retires -> drain completes -> B's regime applies alone
+    assert ex._quantum_retired(0) is True
+    ex._end_drain()
+    assert ex._draining == frozenset()
+    assert ex.reg.cores[2].budget == pytest.approx(1e9)
+    assert ex.reg.cores[0].budget == pytest.approx(1e9)
+    assert ex.reg.cores[1].budget == float("inf")   # B's own lane exempt
+
+
+def test_drain_window_keeps_tighter_incoming_regime():
+    """The min is element-wise: an incoming regime tighter than the
+    outgoing one is enforced during the drain and stays afterwards."""
+    ex = GangExecutor(n_lanes=3, regulation_interval_s=0.01)
+    a = RTJob("A", _sleep_fn(0.001), lanes=(0,), prio=1,
+              budget_bytes=100.0, n_jobs=1)
+    b = RTJob("B", _sleep_fn(0.001), lanes=(1,), prio=9,
+              budget_bytes=2.0, n_jobs=1)
+    ex.submit_rt(a)
+    ex.submit_rt(b)
+    ex._release_jobs()
+    ex.sched.pick_next_task_rt(0, None, ex._threads[(a.uid, 0)])
+    with ex._lock:
+        ex._inflight[0] = a.prio
+    ex.sched.pick_next_task_rt(1, None, ex._threads[(b.uid, 1)])
+    assert ex.reg.cores[2].budget == pytest.approx(2.0)
+    assert ex._quantum_retired(0) is True
+    ex._end_drain()
+    assert ex.reg.cores[2].budget == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------
 # submit_vgang / build_executor: lane remapping + live-member budgets
 # ---------------------------------------------------------------------
 
@@ -315,6 +381,132 @@ def test_submit_vgang_rejects_duplicate_uids_and_oversized_gangs():
     with pytest.raises(ValueError):
         nofn.submit_vgang(_two_member_vgang(), {"m1": _sleep_fn(0)})
     assert nofn.rt_jobs == []
+
+
+# ---------------------------------------------------------------------
+# admission-mode reclaiming (DESIGN.md §7.5): retired member lanes
+# donate, and a preemption revokes unspent grants
+# ---------------------------------------------------------------------
+
+def _reclaim_vgang():
+    """crit c0 (intensity 0.9: most intense, so both siblings are
+    dominated by the donor d0), donor d0, drawer s0."""
+    c0 = RTTask("c0", wcet=9.0, period=50.0, cores=(0,), prio=0,
+                mem_budget=4.0, mem_intensity=0.9)
+    d0 = RTTask("d0", wcet=1.0, period=50.0, cores=(1,), prio=0,
+                mem_budget=50.0, mem_intensity=0.5)
+    s0 = RTTask("s0", wcet=2.0, period=50.0, cores=(2,), prio=0,
+                mem_budget=50.0, mem_intensity=0.3)
+    from repro.vgang.formation import intensity_interference
+    intf = intensity_interference([c0, d0, s0])
+    return VirtualGang("c+d+s", members=[c0, d0, s0], prio=3), intf
+
+
+def test_reclaim_draws_from_retired_member_lanes():
+    """A gated sibling quantum that would be denied draws the unspent
+    window quota of a member whose work this release already retired,
+    instead of stalling."""
+    vg, intf = _reclaim_vgang()
+    policy = VirtualGangPolicy([vg], n_cores=4, interference=intf,
+                               auto_prio=False, rtg_throttle=True,
+                               reclaim=True)
+    fns = {n: _sleep_fn(0) for n in ("c0", "d0", "s0")}
+    ex = policy.build_executor(fns, n_jobs=1,
+                               bytes_per_quantum={"s0": 3.0},
+                               regulation_interval_s=0.05)
+    ex._release_jobs()
+    c0, d0, s0 = vg.members
+    for m, lane in ((c0, 0), (d0, 1), (s0, 2)):
+        ex.sched.pick_next_task_rt(lane, None, ex._threads[(m.uid, lane)])
+    cap = ex.reg.cores[2].budget            # sibling cap = crit budget
+    assert cap == pytest.approx(4.0)
+    # d0's only job retires on its lane -> lane 1 becomes a donor
+    d_job = ex._jobs[d0.uid]
+    inst = ex._active_instance(d_job, 1)
+    inst.remaining_lanes.discard(1)
+    # s0's window is nearly spent: the next quantum would be denied
+    now = 0.01
+    assert ex.reg.charge(2, 3.0, now)
+    got = ex._reclaim_rt_draw(2, ex._jobs[s0.uid], 2.0, now)
+    assert got == pytest.approx(2.0)
+    assert ex.reg.cores[1].donated == pytest.approx(2.0)
+    assert ex.reg.charge(2, 3.0, now + 0.001)   # admitted on the grant
+    # the drawer is dominated by the donor for the crit (0.3 <= 0.5);
+    # a hungrier-than-the-donor drawer would be refused
+    assert ex._reclaim_rt_draw(2, ex._jobs[c0.uid], 1.0, now) == 0.0
+
+
+def test_reclaim_lifts_already_stalled_lane():
+    """A lane tripped earlier in the window (e.g. by a filler charge) is
+    lifted the moment a covering donation exists — the admission
+    analogue of the engines' claim_lift — instead of waiting out the
+    window; and a pool too small to admit the quantum strands nothing."""
+    vg, intf = _reclaim_vgang()
+    policy = VirtualGangPolicy([vg], n_cores=4, interference=intf,
+                               auto_prio=False, rtg_throttle=True,
+                               reclaim=True)
+    fns = {n: _sleep_fn(0) for n in ("c0", "d0", "s0")}
+    ex = policy.build_executor(fns, n_jobs=1,
+                               bytes_per_quantum={"s0": 3.0},
+                               regulation_interval_s=10.0)
+    ex._t0 = time.monotonic()      # _admit_rt_quantum reads ex._now()
+    ex._release_jobs()
+    c0, d0, s0 = vg.members
+    for m, lane in ((c0, 0), (d0, 1), (s0, 2)):
+        ex.sched.pick_next_task_rt(lane, None, ex._threads[(m.uid, lane)])
+    # trip lane 2: an admission denial stalls it to the window end
+    assert ex.reg.charge(2, 3.0, ex._now())
+    assert ex.reg.charge(2, 3.0, ex._now()) is False
+    assert ex.reg.is_stalled(2, ex._now())
+    # no donor yet: the quantum stays stalled and no quota is stranded
+    assert ex._reclaim_rt_draw(2, ex._jobs[s0.uid], 2.0, ex._now()) == 0.0
+    # d0 retires -> its lane's unspent cap covers the shortfall
+    inst = ex._active_instance(ex._jobs[d0.uid], 1)
+    inst.remaining_lanes.discard(1)
+    verdict, stalled = ex._admit_rt_quantum(2, ex._jobs[s0.uid])
+    assert verdict == "run"
+    assert not ex.reg.is_stalled(2, ex._now())
+    assert ex.reg.cores[1].donated > 0.0
+
+
+def test_reclaim_grant_revoked_when_preemption_races_donation():
+    """A donor's quota lift racing a preemption must not leak into the
+    preemptor's regime: the acquire lowers the drawer lane's budget,
+    which revokes the unspent reclaimed grant and stalls the lane that
+    already consumed more than the new limit allows."""
+    vg, intf = _reclaim_vgang()
+    policy = VirtualGangPolicy([vg], n_cores=4, interference=intf,
+                               auto_prio=False, rtg_throttle=True,
+                               reclaim=True)
+    fns = {n: _sleep_fn(0) for n in ("c0", "d0", "s0")}
+    ex = policy.build_executor(fns, n_jobs=1,
+                               bytes_per_quantum={"s0": 3.0},
+                               regulation_interval_s=0.05)
+    p = RTJob("P", _sleep_fn(0.001), lanes=(3,), prio=9,
+              budget_bytes=1.0, n_jobs=1)
+    ex.submit_rt(p)
+    ex._release_jobs()
+    c0, d0, s0 = vg.members
+    for m, lane in ((c0, 0), (d0, 1), (s0, 2)):
+        ex.sched.pick_next_task_rt(lane, None, ex._threads[(m.uid, lane)])
+    inst = ex._active_instance(ex._jobs[d0.uid], 1)
+    inst.remaining_lanes.discard(1)
+    now = 0.01
+    assert ex.reg.charge(2, 3.0, now)
+    assert ex._reclaim_rt_draw(2, ex._jobs[s0.uid], 2.0, now) > 0.0
+    assert ex.reg.cores[2].drawn == pytest.approx(2.0)
+
+    # preemption lands while the grant is still unspent
+    ex.sched.pick_next_task_rt(3, None, ex._threads[(p.uid, 3)])
+    assert ex.sched.g.leader is ex._tasks[p.uid]
+    st = ex.reg.cores[2]
+    assert st.drawn == 0.0                   # grant revoked
+    assert st.budget == pytest.approx(1.0)   # preemptor's floor
+    # lane 2 already consumed 3.0 > 1.0: it may not run again this
+    # window under the stricter regime
+    assert ex.reg.is_stalled(2, now + 0.001)
+    # requeue path: the waiting sibling quantum re-enters the scheduler
+    assert ex._admit_rt_quantum(2, ex._jobs[s0.uid])[0] == "requeue"
 
 
 def test_formed_multi_vgang_executor_one_gang_at_a_time():

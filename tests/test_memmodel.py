@@ -7,7 +7,8 @@ import math
 import pytest
 
 from repro.core.gang import BETask, RTTask
-from repro.core.memmodel import BE, IDLE, RT, MemoryModel
+from repro.core.memmodel import (BE, IDLE, RT, MemoryModel,
+                                 distance_interference)
 from repro.core.sim import Simulator, matrix_interference
 from repro.core.throttle import BandwidthRegulator
 from repro.vgang.formation import (VirtualGang, critical_member,
@@ -93,6 +94,63 @@ def test_memmodel_slowdown_matches_bruteforce():
             want = max([1.0] + [intf(victim, nm) for nm in present
                                 if nm != victim])
             assert mm.slowdown(victim) == want, (op, core, victim)
+
+
+# ---------------------------------------------------------------------
+# location-dependent interference (ROADMAP: formation under per-core
+# locality) — the slowdown memo must key on (victim, core), versioned by
+# the location epoch, not on the victim name alone
+# ---------------------------------------------------------------------
+
+def _near_far_intf(victim, aggressor, dist):
+    """Heterogeneous per-core interference: a neighbour (shared cache
+    slice) slows the victim 3x, a distant core only 1.5x."""
+    return 3.0 if dist <= 1 else 1.5
+
+
+def test_distance_aware_slowdown_tracks_corunner_location():
+    """A co-runner moving cores changes no 0<->1 name presence — the old
+    name-keyed memo would return the stale aggregate. The (victim, core)
+    memo keyed on the location epoch must see the move."""
+    intf = distance_interference(_near_far_intf)
+    mm = MemoryModel(4, intf, BandwidthRegulator(4))
+    mm.set_rt(0, _mk("a"))
+    mm.set_be(1, ("b",), 0.0)               # neighbour: 3x
+    assert mm.slowdown("a", 0) == 3.0
+    mm.set_be(3, ("b",), 0.0)               # b appears far too
+    mm.clear(1)                             # ...and leaves the nearby core
+    # name multiset never saw a 0<->1 transition for "b", yet the only
+    # remaining b sits at distance 3
+    assert mm.slowdown("a", 0) == 1.5
+    mm.set_be(1, ("b",), 0.0)
+    assert mm.slowdown("a", 0) == 3.0
+    # the aggregate is per *victim core* as well
+    mm.clear(1)
+    mm.set_rt(2, _mk("a", 2))
+    assert mm.slowdown("a", 2) == 3.0       # core 3 is its neighbour
+    assert mm.slowdown("a", 0) == 1.5
+
+
+def test_distance_aware_engines_agree():
+    """Both engines drive the same distance-aware model: a victim gang
+    co-running with a near aggressor is slower than with a far one, and
+    the quantum/event engines agree on every response time."""
+    def build(far, dt):
+        agg_core = 3 if far else 1
+        t1 = RTTask("vic", wcet=2.0, period=10.0, cores=(0,), prio=2,
+                    n_jobs=1)
+        t2 = RTTask("agg", wcet=8.0, period=10.0, cores=(agg_core,),
+                    prio=2, n_jobs=1)
+        return Simulator(4, [t1, t2],
+                         interference=distance_interference(_near_far_intf),
+                         rt_gang_enabled=True, dt=dt)
+
+    for far, want in ((False, 6.0), (True, 3.0)):
+        q = build(far, DT).run(10.0)
+        e = build(far, None).run(10.0)
+        assert e.response_times["vic"][0] == pytest.approx(want)
+        assert abs(q.response_times["vic"][0] -
+                   e.response_times["vic"][0]) <= 2 * DT + 1e-9
 
 
 # ---------------------------------------------------------------------

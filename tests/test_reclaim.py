@@ -1,0 +1,331 @@
+"""Dynamic reclaiming (DESIGN.md §7.5): quantum-vs-event engine parity
+on donation accounting, soundness of the reclaim RTA bound against both
+engines, and the rtgT+dr acceptance lift.
+
+The byte-parity scenario is constructed so every event — releases, job
+completions, budget exhaustions, donations, window boundaries — lands on
+an exact binary multiple of the quantum (dt = 1/32 ms, rates and budgets
+chosen so all charges are exact in binary floating point). Both engines
+must then agree *exactly*: same response times, same trip times/counts,
+same donated/drawn totals, same best-effort progress.
+"""
+import random
+
+import pytest
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import matrix_interference
+from repro.vgang.formation import (VirtualGang, critical_member,
+                                   intensity_interference)
+from repro.vgang.rta import (reclaim_wcet, rtg_throttle_wcet,
+                             accepts_rtg_throttle, schedulable_rtg_throttle)
+from repro.vgang.sched import VirtualGangPolicy
+
+DT = 0.03125                       # 1/32: exact in binary
+
+
+def exact_vgang():
+    """crit a (no traffic, cap 0.75), early donor b, drawer s — all
+    trips/donations/completions on dt multiples (see module docstring):
+    b completes 0.25; s runs [0, .375) on its own quota, [.375, .625)
+    on b's leftover donation in window 0, then a full 0.75-grant per
+    window, completing at 2.625; a completes exactly at 3.125. The
+    drawer does not slow the crit (intf(a, s) = 1), so no running
+    victim's slowdown changes at a trip instant — which would re-open
+    the quantum engine's one-step co-runner bias at trips."""
+    a = RTTask("a", wcet=3.0, period=8.0, cores=(0,), prio=5,
+               mem_budget=0.75, n_jobs=1)
+    b = RTTask("b", wcet=0.25, period=8.0, cores=(1,), prio=5,
+               mem_rate=1.0, mem_budget=8.0, n_jobs=1)
+    s = RTTask("s", wcet=1.0, period=8.0, cores=(2,), prio=5,
+               mem_rate=2.0, mem_budget=8.0, n_jobs=1)
+    intf = matrix_interference({("a", "b"): 2.0, ("s", "a"): 2.0})
+    return VirtualGang("abs", [a, b, s], prio=5), intf
+
+
+def run_exact(dt):
+    vg, intf = exact_vgang()
+    pol = VirtualGangPolicy([vg], 4, intf, auto_prio=False,
+                            rtg_throttle=True, reclaim=True)
+    be = [BETask("be", cores=(3,), mem_rate=1.0)]
+    sim = pol.build_simulator(be_tasks=be, dt=dt)
+    return sim.run(6.0), sim
+
+
+def test_reclaim_engines_byte_identical():
+    """Donation accounting parity: the two engines claim the same
+    amounts from the same donors at the same instants — response times,
+    trip counts, reclaimed totals and be_progress are all *exactly*
+    equal (not within a tolerance)."""
+    e, esim = run_exact(None)
+    q, qsim = run_exact(DT)
+    assert e.engine == "event" and q.engine == "quantum"
+    assert q.response_times == e.response_times
+    assert q.throttle_events == e.throttle_events
+    assert q.reclaimed == e.reclaimed
+    assert q.be_progress == e.be_progress
+    assert q.deadline_misses == e.deadline_misses
+    for c in range(4):
+        qs, es = qsim.reg.cores[c], esim.reg.cores[c]
+        assert qs.throttle_events == es.throttle_events, c
+
+    # ...and both match the hand-derived schedule
+    assert e.response_times["b"][0] == pytest.approx(0.25)
+    assert e.response_times["s"][0] == pytest.approx(2.625)
+    assert e.response_times["a"][0] == pytest.approx(3.125)
+    assert e.reclaimed == pytest.approx(0.5 + 0.75 + 0.75)
+    assert e.throttle_events == 5        # s: .625, 1.75; be: w0..w2
+    assert e.be_progress["be"] == pytest.approx(5.25)
+
+
+def test_reclaim_lifts_drawer_without_hurting_static_bounds():
+    """Reclaiming strictly improves the drawer and never pushes any
+    member past the *static* duty-cycle bound (the exchange gate's
+    guarantee): with it off, s idles out every window tail."""
+    vg, intf = exact_vgang()
+    off = VirtualGangPolicy([vg], 4, intf, auto_prio=False,
+                            rtg_throttle=True, reclaim=False)
+    r_off = off.build_simulator(dt=None).run(6.0)
+    r_on, _ = run_exact(None)
+    assert r_on.response_times["s"][0] < r_off.response_times["s"][0]
+    static = rtg_throttle_wcet(vg, intf)
+    for m in vg.members:
+        assert r_on.response_times[m.name][0] <= static + 1e-9
+
+
+def test_reclaim_messy_taskset_amounts_still_agree():
+    """On a taskset whose events do not align to the quantum, response
+    times differ by O(dt) as usual — but the donated/drawn totals are
+    still identical (claims happen at the same exhaustion instants)."""
+    a = RTTask("a", wcet=6.0, period=20.0, cores=(0,), prio=5,
+               mem_intensity=0.2, n_jobs=1)
+    b = RTTask("b", wcet=0.5, period=20.0, cores=(1,), prio=5,
+               mem_rate=1.0, n_jobs=1)
+    s = RTTask("s", wcet=3.0, period=20.0, cores=(2,), prio=5,
+               mem_rate=2.0, n_jobs=1)
+    intf = matrix_interference({("a", "b"): 1.5, ("a", "s"): 1.3,
+                                ("s", "a"): 1.25})
+    vg = VirtualGang("abs", [a, b, s], prio=5)
+    runs = {}
+    for dt in (None, 0.0125):
+        pol = VirtualGangPolicy([vg], 3, intf, auto_prio=False,
+                                rtg_throttle=True, reclaim=True)
+        runs[dt] = pol.simulate(20.0, dt=dt)
+    assert runs[None].reclaimed == runs[0.0125].reclaimed
+    assert runs[None].reclaimed == pytest.approx(3.5)
+    for name in ("a", "b", "s"):
+        assert abs(runs[None].response_times[name][0] -
+                   runs[0.0125].response_times[name][0]) <= 4 * 0.0125
+
+
+# ---------------------------------------------------------------------
+# the reclaim RTA bound (vgang/rta.py)
+# ---------------------------------------------------------------------
+
+def test_reclaim_wcet_tighter_and_sound_on_exact_vgang():
+    vg, intf = exact_vgang()
+    static = rtg_throttle_wcet(vg, intf)
+    dr = reclaim_wcet(vg, intf)
+    assert dr < static
+    r, _ = run_exact(None)
+    makespan = max(rs[0] for rs in r.response_times.values())
+    assert makespan <= dr + 1e-9
+
+
+def test_reclaim_acceptance_dominates_rtgT():
+    """min(static, reclaim) pricing: a set the static bound rejects but
+    the reclaim bound accepts — and never the other way around."""
+    a = RTTask("a", wcet=6.0, period=9.0, cores=(0,), prio=5,
+               mem_intensity=0.2, n_jobs=1)
+    b = RTTask("b", wcet=0.5, period=9.0, cores=(1,), prio=5,
+               mem_rate=1.0, n_jobs=1)
+    s = RTTask("s", wcet=3.0, period=9.0, cores=(2,), prio=5,
+               mem_rate=2.0, n_jobs=1)
+    intf = matrix_interference({("a", "b"): 1.5, ("a", "s"): 1.3,
+                                ("s", "a"): 1.25})
+    vgs = [VirtualGang("abs", [a, b, s], prio=5)]
+    assert not accepts_rtg_throttle(vgs, intf)
+    assert accepts_rtg_throttle(vgs, intf, reclaim=True)
+    res = schedulable_rtg_throttle(vgs, intf, reclaim=True)
+    assert res["abs"]["wcrt"] <= 9.0
+
+
+def test_reclaim_bound_sound_against_engines_randomized():
+    """Property sweep: random window-aligned vgangs simulated under the
+    reclaiming dispatch never finish later than min(static, reclaim) —
+    the bound the rtgT+dr grid column prices admission with."""
+    rng = random.Random(7)
+    checked = 0
+    for trial in range(30):
+        n = rng.randint(2, 4)
+        members = []
+        for i in range(n):
+            members.append(RTTask(
+                f"m{trial}_{i}", wcet=round(rng.uniform(0.5, 4.0), 3),
+                period=40.0, cores=(i,), prio=5,
+                mem_intensity=round(rng.uniform(0.05, 0.9), 3),
+                n_jobs=1))
+        intf = intensity_interference(members, gamma=0.8)
+        vg = VirtualGang(f"vg{trial}", members, prio=5)
+        static = rtg_throttle_wcet(vg, intf)
+        dr = reclaim_wcet(vg, intf)
+        bound = min(static, dr)
+        if bound == float("inf") or bound > 40.0:
+            continue
+        pol = VirtualGangPolicy([vg], n, intf, auto_prio=False,
+                                rtg_throttle=True, reclaim=True)
+        r = pol.simulate(40.0, dt=None)
+        for m in members:
+            assert r.response_times[m.name], m.name
+            assert r.response_times[m.name][0] <= bound + 1e-6, \
+                (trial, m.name, r.response_times[m.name][0], static, dr)
+        checked += 1
+    assert checked >= 10
+
+
+def test_donors_are_gang_scoped():
+    """A core left idle by a *previously scheduled* gang must not fund
+    another gang's drawer: its leftover grant was never priced as a
+    co-runner by the drawer's static bound."""
+    from repro.core.memmodel import MemoryModel
+    from repro.core.throttle import BandwidthRegulator
+
+    reg = BandwidthRegulator(3, interval=1.0, mode="reactive",
+                             reclaim=True)
+    mm = MemoryModel(3, lambda v, a: 1.0, reg)
+    old = RTTask("old", wcet=1.0, period=10.0, cores=(0,), prio=3,
+                 mem_rate=1.0)
+    peer = RTTask("peer", wcet=1.0, period=10.0, cores=(1,), prio=7,
+                  mem_rate=1.0)
+    cur = RTTask("cur", wcet=1.0, period=10.0, cores=(2,), prio=7,
+                 mem_rate=2.0)
+    reg.set_core_budgets({0: 5.0, 1: 5.0, 2: 1.0})
+    mm.set_rt(0, old)
+    mm.clear(0)                      # gang at prio 3 departed; quota left
+    mm.set_rt(1, peer)
+    mm.clear(1)                      # same-gang member retired
+    mm.set_rt(2, cur)
+    got = mm.claim(2, "cur", 2.0, 0.5)
+    assert got == pytest.approx(1.0)             # only peer's window tail
+    assert reg.cores[0].donated == 0.0           # foreign gang untouched
+    assert reg.cores[1].donated == pytest.approx(1.0)
+
+
+def test_boundary_straddling_quantum_still_trips():
+    """A quantum whose exhaustion instant lands on the window boundary
+    must not pre-claim: rolling the drawer's window to the future t_x
+    would erase the current window's usage and admit traffic that the
+    regulator should throttle. With reclaiming on, the straddling
+    quantum behaves exactly as with it off."""
+    from repro.core.memmodel import MemoryModel
+    from repro.core.throttle import BandwidthRegulator
+
+    outcomes = {}
+    for reclaim in (False, True):
+        reg = BandwidthRegulator(1, interval=1.0, mode="reactive",
+                                 reclaim=reclaim)
+        reg.set_core_budgets({0: 10.0})
+        mm = MemoryModel(1, lambda v, a: 1.0, reg)
+        t = RTTask("t", wcet=5.0, period=10.0, cores=(0,), prio=1,
+                   mem_rate=10.0)
+        mm.set_rt(0, t)
+        assert reg.charge(0, 9.5, 0.5)
+        frac = mm.charge_quantum(0, 0.2, 0.95)   # t_x = exactly 1.0
+        st = reg.cores[0]
+        outcomes[reclaim] = (frac, st.used, st.throttle_events,
+                             st.window_start)
+    assert outcomes[True] == outcomes[False]
+    assert outcomes[True][0] == pytest.approx(0.5 / 2.0)    # head/amount
+    assert outcomes[True][2] == 1                           # tripped
+
+
+def test_draw_from_require_full_is_all_or_nothing():
+    from repro.core.throttle import BandwidthRegulator
+    reg = BandwidthRegulator(3, interval=1.0, mode="admission",
+                             reclaim=True)
+    reg.set_core_budgets({0: 1.0, 1: 1.0, 2: 5.0})
+    assert reg.draw_from(2, (0, 1), 3.0, 0.1, require_full=True) == 0.0
+    assert reg.cores[0].donated == 0.0           # nothing stranded
+    assert reg.draw_from(2, (0, 1), 2.0, 0.1,
+                         require_full=True) == pytest.approx(2.0)
+
+
+def test_gang_acquire_voids_prior_grants():
+    """A gang taking the lock must not inherit the previous regime's
+    donation state — even when its budget values coincide, so
+    set_core_budgets' value diff cannot see the change (the executor's
+    acquire hook calls reset_reclaim; both engines wire the same glock
+    event)."""
+    from repro.core.executor import GangExecutor, RTJob
+    import time as _time
+
+    ex = GangExecutor(n_lanes=2, regulation_interval_s=1.0, reclaim=True)
+    a = RTJob("A", lambda lane, idx: None, lanes=(0,), prio=1,
+              budget_bytes=2.0, n_jobs=1)
+    b = RTJob("B", lambda lane, idx: None, lanes=(0,), prio=9,
+              budget_bytes=2.0, n_jobs=1)
+    ex.submit_rt(a)
+    ex.submit_rt(b)
+    ex._t0 = _time.monotonic()
+    ex._release_jobs()
+    ex.sched.pick_next_task_rt(0, None, ex._threads[(a.uid, 0)])
+    # a grant issued while A leads (lane 1 is the capped free lane)...
+    assert ex.reg.draw_from(0, (1,), 1.5, ex._now()) == pytest.approx(1.5)
+    assert ex.reg.cores[0].drawn == pytest.approx(1.5)
+    assert ex.reg.cores[1].donated == pytest.approx(1.5)
+    # ...is voided by B's acquire although the budget values are equal
+    ex.sched.pick_next_task_rt(0, None, ex._threads[(b.uid, 0)])
+    assert ex.sched.g.leader is ex._tasks[b.uid]
+    assert ex.reg.cores[0].drawn == 0.0
+    assert ex.reg.cores[1].donated == 0.0
+
+
+def test_claim_lift_requires_covering_grant():
+    """A grant too small to cover the trip overshoot must not lift the
+    stall: a false lift would immediately re-trip, double-counting the
+    stall, while the quota is already spent."""
+    from repro.core.memmodel import MemoryModel
+    from repro.core.throttle import BandwidthRegulator
+
+    reg = BandwidthRegulator(2, interval=1.0, mode="reactive",
+                             reclaim=True)
+    reg.set_core_budgets({0: 1.0, 1: 0.3})
+    mm = MemoryModel(2, lambda v, a: 1.0, reg)
+    s = RTTask("s", wcet=5.0, period=10.0, cores=(0,), prio=1,
+               mem_rate=2.0)
+    d = RTTask("d", wcet=1.0, period=10.0, cores=(1,), prio=1,
+               mem_rate=0.3)
+    mm.set_rt(1, d)
+    reg.charge(1, 0.1, 0.1)
+    mm.clear(1)                         # donor idle: 0.2 donatable
+    mm.set_rt(0, s)
+    assert reg.charge(0, 1.0, 0.2)
+    assert reg.charge(0, 0.5, 0.3) is False     # overshoot: used 1.5
+    assert reg.cores[0].throttle_events == 1
+    assert mm.claim_lift(0, s, 0.5) is False    # 0.2 < 0.5 deficit
+    assert reg.is_stalled(0, 0.6)
+    assert reg.cores[0].throttle_events == 1    # no double count
+
+
+def test_reclaim_wcet_single_member_matches_inflated():
+    t = RTTask("solo", wcet=2.0, period=10.0, cores=(0, 1), prio=3)
+    vg = VirtualGang("solo", [t], prio=3)
+    assert reclaim_wcet(vg) == vg.inflated_wcet()
+
+
+def test_reclaim_wcet_starved_sibling_rescued_by_donation():
+    """A sibling with zero static headroom (cap exhausted instantly) is
+    inf under the static bound; with a donating co-sibling that finishes
+    early, the reclaim bound is finite."""
+    a = RTTask("a", wcet=4.0, period=50.0, cores=(0,), prio=5,
+               mem_budget=1.0, mem_intensity=0.1)
+    d = RTTask("d", wcet=0.5, period=50.0, cores=(1,), prio=5,
+               mem_rate=1.0)
+    z = RTTask("z", wcet=1.0, period=50.0, cores=(2,), prio=5,
+               mem_rate=1000.0)      # q = cap/1000: effectively starved
+    intf = matrix_interference({("a", "d"): 1.5, ("a", "z"): 1.2})
+    vg = VirtualGang("adz", [a, d, z], prio=5)
+    assert critical_member(vg, intf).name == "a"
+    static = rtg_throttle_wcet(vg, intf)
+    dr = reclaim_wcet(vg, intf)
+    assert dr < static

@@ -186,6 +186,91 @@ def test_charge_partial_admission_mode_is_all_or_nothing():
     assert reg.cores[0].used == pytest.approx(0.9)
 
 
+def test_lowering_budget_below_used_trips_immediately():
+    """Mid-window budget cut below the already-consumed usage must stall
+    the core at once — not let it overrun until the next window roll."""
+    reg = BandwidthRegulator(2, interval=1.0, mode="reactive")
+    reg.set_core_budgets({0: 10.0, 1: 10.0})
+    assert reg.charge(0, 6.0, 0.2)
+    changed = reg.set_core_budgets({0: 4.0, 1: 10.0})
+    assert changed == {0}
+    assert reg.is_stalled(0, 0.3)
+    assert reg.cores[0].throttle_events == 1
+    assert reg.charge_partial(0, 1.0, 0.4) == 0.0    # denied while stalled
+    assert not reg.is_stalled(0, 1.05)               # frees at window end
+    # an equal-usage cut does not trip (usage never *exceeds* the limit)
+    assert reg.charge(1, 5.0, 0.2)
+    reg.set_core_budgets({0: 4.0, 1: 5.0})
+    assert not reg.is_stalled(1, 0.3)
+
+
+def test_lowering_budget_with_stale_window_is_harmless():
+    """The immediate-trip rule pins the stall to the end of the window
+    the usage belongs to; if that window is long past, the stall instant
+    is already behind ``now`` and the fresh window starts clean."""
+    reg = BandwidthRegulator(1, interval=1.0, mode="reactive")
+    reg.set_core_budgets({0: 10.0})
+    assert reg.charge(0, 6.0, 0.2)        # usage in window [0, 1)
+    reg.set_core_budgets({0: 4.0})        # cut long after that window
+    assert not reg.is_stalled(0, 7.3)
+    assert reg.charge(0, 3.0, 7.4)
+
+
+def test_reclaim_draw_and_donate_accounting():
+    """Pull-based donation: a draw marks the donors' ``donated`` (core
+    order, never handed out twice), credits the drawer's ``drawn``, and
+    both reset at the window roll."""
+    reg = BandwidthRegulator(3, interval=1.0, mode="reactive",
+                             reclaim=True)
+    reg.set_core_budgets({0: 2.0, 1: 3.0, 2: 4.0})
+    assert reg.charge(1, 1.0, 0.1)                    # donor 1: 2.0 left
+    assert reg.donatable(1, 0.1) == pytest.approx(2.0)
+    assert reg.donatable(0, 0.1) == pytest.approx(2.0)
+    got = reg.draw_from(2, (0, 1), 3.0, 0.2)
+    assert got == pytest.approx(3.0)
+    assert reg.cores[0].donated == pytest.approx(2.0)  # core order first
+    assert reg.cores[1].donated == pytest.approx(1.0)
+    assert reg.cores[2].drawn == pytest.approx(3.0)
+    assert reg.cores[2].limit == pytest.approx(7.0)
+    # the donated quota is gone from the donors' windows
+    assert reg.donatable(0, 0.2) == 0.0
+    assert reg.charge(1, 1.5, 0.3) is False            # 3 - 1 - 1 = 1 left
+    # ...and the drawer's window really is extended
+    assert reg.charge(2, 6.5, 0.3)
+    assert reg.charge(2, 1.0, 0.35) is False
+    # everything resets at the (lazy, per-core) roll
+    assert reg.donatable(0, 1.1) == pytest.approx(2.0)
+    assert not reg.is_stalled(2, 1.1)
+    assert reg.cores[2].drawn == 0.0
+    assert reg.total_reclaimed == pytest.approx(3.0)
+
+
+def test_reclaim_disabled_draws_nothing():
+    reg = BandwidthRegulator(2, interval=1.0, mode="reactive")
+    reg.set_core_budgets({0: 5.0, 1: 5.0})
+    assert reg.draw_from(1, (0,), 2.0, 0.1) == 0.0
+    assert reg.cores[0].donated == 0.0
+
+
+def test_budget_decrease_revokes_unspent_drawn_quota():
+    """A stricter incoming regime wins over quota granted under the old
+    one: lowering a core's budget clears its reclaimed grant and stalls
+    it if usage already exceeds the new limit."""
+    reg = BandwidthRegulator(2, interval=1.0, mode="admission",
+                             reclaim=True)
+    reg.set_core_budgets({0: 5.0, 1: 5.0})
+    assert reg.charge(1, 4.0, 0.1)
+    assert reg.draw_from(1, (0,), 3.0, 0.1) == pytest.approx(3.0)
+    assert reg.charge(1, 3.5, 0.15)                   # runs on the grant
+    reg.set_core_budgets({1: 4.0})                    # preemptor's regime
+    assert reg.cores[1].drawn == 0.0
+    assert reg.is_stalled(1, 0.2)                     # 7.5 used > 4.0
+    # infinite-budget donors have nothing to give
+    reg2 = BandwidthRegulator(2, interval=1.0, reclaim=True)
+    reg2.set_core_budgets({1: 1.0})
+    assert reg2.draw_from(1, (0,), 2.0, 0.0) == 0.0
+
+
 def test_budget_follows_gang():
     """Budget switches with gang-lock ownership (paper §IV-F)."""
     reg = BandwidthRegulator(2, interval=1.0, mode="admission")
