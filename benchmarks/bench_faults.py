@@ -1,0 +1,218 @@
+"""Fault-containment benchmark (ISSUE 6 tentpole, DESIGN.md §11).
+
+Demonstrates that runtime overrun enforcement (core/faults.py) contains
+misbehaving gangs: on a 3-gang + best-effort workload over 8 cores, a
+seeded fault plan (WCET overruns on one gang, one hung member thread)
+is run three ways per engine —
+
+* ``baseline``:   no faults, no enforcement — the fault-free reference;
+* ``unenforced``: faults injected, no enforcement — the overrunning
+  gang starves every lower-priority gang (jobs that never complete
+  show up as lost completions);
+* ``enforced``:   the same faults under ``abort`` enforcement with a
+  wall-clock watchdog — every non-faulty gang's deadline misses and
+  completion count must equal the baseline, with zero lock leaks.
+
+A fourth section drives the wall-clock executor (core/executor.py)
+with a genuinely hung member function and records the watchdog abort.
+
+The containment criteria are *asserted*: the benchmark exits nonzero
+if enforcement fails to contain the faults, so CI can run it as a
+smoke job. Results go to BENCH_faults.json at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_faults.py [--smoke] [--out PATH]
+
+--smoke shortens the simulated horizon and the executor run (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.core.executor import GangExecutor, RTJob
+from repro.core.faults import (Enforcement, FaultPlan, HungThread,
+                               WcetOverrun)
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import Simulator
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FAULTY = "gB"
+NONFAULTY = ("gA", "gC")
+
+
+def taskset():
+    """Three RT gangs + two best-effort tasks on 8 cores (~62% RT
+    utilization fault-free; the 4x overrun pushes it past 1 so the
+    un-enforced run visibly starves the victim gangs)."""
+    rts = [
+        RTTask("gA", wcet=2.5, period=12.0, cores=(0, 1, 2), prio=6,
+               mem_budget=10.0, criticality=2),
+        RTTask(FAULTY, wcet=4.0, period=18.0, cores=(3, 4, 5), prio=5,
+               mem_budget=10.0, criticality=1),
+        RTTask("gC", wcet=5.0, period=25.0, cores=(0, 1, 2, 3, 4, 5, 6, 7),
+               prio=4, mem_budget=10.0, criticality=0),
+    ]
+    bes = [BETask("be_mem", cores=(6, 7), mem_rate=1.0),
+           BETask("be_cpu", cores=(6, 7), mem_rate=0.01)]
+    return rts, bes
+
+
+PLAN = FaultPlan(faults=(
+    WcetOverrun(FAULTY, factor=4.0, prob=0.5),
+    HungThread(FAULTY, job=7, thread=1),
+), seed=42)
+
+ENF = Enforcement(action="abort", factor=1.2, watchdog_factor=2.0)
+
+
+def simulate(dt, horizon, fault_plan=None, enforcement=None):
+    rts, bes = taskset()
+    sim = Simulator(8, rts, be_tasks=bes, dt=dt,
+                    fault_plan=fault_plan, enforcement=enforcement)
+    t0 = time.time()
+    res = sim.run(horizon)
+    return res, time.time() - t0
+
+
+def summarize(res, wall):
+    return {
+        "misses": dict(res.deadline_misses),
+        "completions": {n: len(rs) for n, rs in
+                        res.response_times.items()},
+        "wcrt": {n: (max(rs) if rs else None)
+                 for n, rs in res.response_times.items()},
+        "faults": res.faults,
+        "wall_s": round(wall, 4),
+    }
+
+
+def run_engines(horizon):
+    out = {}
+    violations = []
+    for engine, dt in (("quantum", 0.05), ("event", None)):
+        base, wb = simulate(dt, horizon)
+        loose, wl = simulate(dt, horizon, fault_plan=PLAN)
+        hard, wh = simulate(dt, horizon, fault_plan=PLAN,
+                            enforcement=ENF)
+        out[engine] = {"baseline": summarize(base, wb),
+                       "unenforced": summarize(loose, wl),
+                       "enforced": summarize(hard, wh)}
+        # ---- containment criteria (hard failures) -------------------
+        for n in NONFAULTY:
+            if hard.deadline_misses[n] != base.deadline_misses[n]:
+                violations.append(
+                    f"{engine}: {n} misses {hard.deadline_misses[n]} "
+                    f"!= baseline {base.deadline_misses[n]}")
+            if len(hard.response_times[n]) != len(base.response_times[n]):
+                violations.append(
+                    f"{engine}: {n} completions "
+                    f"{len(hard.response_times[n])} != baseline "
+                    f"{len(base.response_times[n])}")
+        if hard.faults["lock_leaks"] != 0:
+            violations.append(
+                f"{engine}: {hard.faults['lock_leaks']} lock leaks")
+        if not (hard.faults["enforced"]["abort"] > 0
+                or hard.faults["watchdog_fires"] > 0):
+            violations.append(f"{engine}: enforcement never fired")
+        # the un-enforced run must actually demonstrate the cascade,
+        # otherwise the enforced comparison is vacuous
+        lost = sum(len(base.response_times[n]) - len(loose.response_times[n])
+                   for n in NONFAULTY)
+        if lost <= 0:
+            violations.append(
+                f"{engine}: un-enforced faults cost no completions "
+                f"— workload too lax to demonstrate containment")
+        out[engine]["victim_completions_lost_unenforced"] = lost
+    return out, violations
+
+
+def run_executor(duration):
+    """Wall-clock executor: one member of ``hog`` hangs; the lane
+    watchdog must abort the gang instead of deadlocking the barrier."""
+    def hang(lane, idx):
+        if idx == 1 and lane == 0:
+            # far past the watchdog bound (2 x 0.06 s), but bounded so
+            # the final worker join doesn't dominate the benchmark
+            time.sleep(2.0 + duration)
+        else:
+            time.sleep(0.002)
+
+    def quick(lane, idx):
+        time.sleep(0.002)
+
+    ex = GangExecutor(2, watchdog_factor=2.0)
+    ex.submit_rt(RTJob("hog", hang, lanes=(0, 1), prio=2,
+                       period_s=0.06, wcet_s=0.01, n_jobs=3))
+    ex.submit_rt(RTJob("ok", quick, lanes=(0, 1), prio=1,
+                       period_s=0.1, wcet_s=0.01))
+    t0 = time.time()
+    res = ex.run(duration)
+    wall = time.time() - t0
+    out = {
+        "watchdog_aborts": [list(a) for a in res["watchdog_aborts"]],
+        "aborted": dict(res["aborted"]),
+        "ok_completions": len(res["response_times"].get("ok", [])),
+        "wall_s": round(wall, 4),
+    }
+    violations = []
+    if res["aborted"].get("hog", 0) < 1:
+        violations.append("executor: hung gang was never aborted")
+    if out["ok_completions"] < 1:
+        violations.append("executor: victim gang made no progress")
+    if wall > 5 * duration + 5.0:
+        violations.append("executor: run wedged past the watchdog")
+    return out, violations
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon / executor run (CI)")
+    ap.add_argument("--out",
+                    default=os.path.join(ROOT, "BENCH_faults.json"))
+    args = ap.parse_args()
+
+    horizon = 400.0 if args.smoke else 2000.0
+    engines, violations = run_engines(horizon)
+    exec_out, exec_violations = run_executor(0.4 if args.smoke else 1.0)
+    violations += exec_violations
+
+    out = {
+        "horizon_ms": horizon,
+        "plan": {"seed": PLAN.seed,
+                 "faults": [repr(f) for f in PLAN.faults]},
+        "enforcement": {"action": ENF.action, "factor": ENF.factor,
+                        "watchdog_factor": ENF.watchdog_factor},
+        "engines": engines,
+        "executor": exec_out,
+        "contained": not violations,
+        "violations": violations,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    for engine in ("quantum", "event"):
+        e = engines[engine]
+        print(json.dumps({
+            "engine": engine,
+            "victim_completions_lost_unenforced":
+                e["victim_completions_lost_unenforced"],
+            "enforced": e["enforced"]["faults"]["enforced"],
+            "watchdog_fires": e["enforced"]["faults"]["watchdog_fires"],
+            "lock_leaks": e["enforced"]["faults"]["lock_leaks"],
+        }))
+    print(json.dumps({"executor": exec_out}))
+    if violations:
+        print("CONTAINMENT FAILED:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        sys.exit(1)
+    print(f"containment held; wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

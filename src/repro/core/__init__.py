@@ -17,10 +17,14 @@ from repro.core.events import EventEngine
 from repro.core.throttle import BandwidthRegulator
 from repro.core.rta import response_time, schedulable, total_utilization
 from repro.core.executor import BEJob, GangExecutor, RTJob
+from repro.core.faults import (BeOverrun, Enforcement, FaultPlan,
+                               HungThread, LostWakeup, WcetOverrun)
 from repro.core.tracing import Trace
 
 __all__ = ["BETask", "RTTask", "Thread", "make_virtual_gang",
            "GangScheduler", "GLock", "Simulator", "SimResult", "EventEngine",
            "matrix_interference", "no_interference", "BandwidthRegulator",
            "response_time", "schedulable", "total_utilization",
-           "BEJob", "GangExecutor", "RTJob", "Trace"]
+           "BEJob", "GangExecutor", "RTJob", "Trace",
+           "FaultPlan", "Enforcement", "WcetOverrun", "HungThread",
+           "LostWakeup", "BeOverrun"]

@@ -67,8 +67,15 @@ _EPS_T = 1e-9       # time comparison tolerance (ms)
 _EPS_W = 1e-9       # work comparison tolerance (ms of compute)
 _INF = float("inf")
 
-# event kinds (heap tiebreak after time+seq; values are cosmetic)
-_RELEASE, _COMPLETE, _EXHAUST, _UNSTALL = range(4)
+# event kinds (heap tiebreak after time+seq; values are cosmetic).
+# _ENFORCE:     predicted work-budget crossing of a job (faults.py) —
+#               validated against the materialized remaining at pop, so
+#               stale predictions are harmless.
+# _WATCHDOG:    a job's absolute wall-clock abort deadline (pushed once
+#               at release; FaultManager decides whether it still applies).
+# _DEMCOMPLETE: a demoted residual drains its share on one core.
+(_RELEASE, _COMPLETE, _EXHAUST, _UNSTALL,
+ _ENFORCE, _WATCHDOG, _DEMCOMPLETE) = range(7)
 
 
 class _TaskState:
@@ -122,7 +129,10 @@ class EventEngine:
 
         response: Dict[str, List[float]] = {t.name: [] for t in tasks}
         misses = {t.name: 0 for t in tasks}
+        miss_times: Dict[str, List[float]] = {t.name: [] for t in tasks}
         be_progress = {b.name: 0.0 for b in sim.be_tasks}
+        fm = sim.fm
+        fm.bind(misses, miss_times, response)
         slack = 0.0
 
         current: List[Optional[Thread]] = [None] * n
@@ -196,6 +206,22 @@ class EventEngine:
                     if r > 0.0:
                         reg.charge_span(c, r, t0, t)
                     trace.record(c, th.task.name, t0, t)
+            elif fm.dem_thread(c) is not None:
+                # demoted residual (faults.py): drains on the free core
+                # ahead of BE fillers, charging its own traffic, under
+                # the ambient throttle budget; not counted as slack
+                dth = fm.dem_thread(c)
+                d = fm.dem_head(c)
+                if rt_stalled[c]:
+                    trace.record(c, stall_label[c] or
+                                 "throttled:" + dth.task.name, t0, t)
+                else:
+                    d.residual[c] = max(0.0,
+                                        d.residual[c] - (t - t0) / slow[c])
+                    r = mm.rates[c]
+                    if r > 0.0:
+                        reg.charge_span(c, r, t0, t)
+                    trace.record(c, "dem:" + dth.task.name, t0, t)
             else:
                 slack += t - t0
                 if mm.kind[c] == BE:
@@ -239,10 +265,14 @@ class EventEngine:
                 return
             job = Job(task=t, release=rel, index=ts.released,
                       remaining={c: t.thread_wcet(c) for c in t.cores})
+            fm.on_release(job)
             ts.released += 1
             ts.queue.append(job)
             if len(ts.queue) == 1:
                 activate(job)
+            wd = fm.watchdog_at(t.uid, job.index)
+            if wd is not None and wd <= horizon + _EPS_T:
+                push(wd, _WATCHDOG, (t.uid, job.index))
             nxt = t.release_time(ts.released)
             if nxt is not None and nxt < horizon:
                 push(nxt, _RELEASE, uid)
@@ -256,12 +286,29 @@ class EventEngine:
         def ready_thread(c: int) -> Optional[Thread]:
             h = ready[c]
             while h:
-                _, _, uid = h[0]
+                e = h[0]
+                uid = e[2]
+                if uid in fm.suspended:
+                    # degraded mode: park the entry; re-pushed verbatim
+                    # when the suspension lifts
+                    heapq.heappop(h)
+                    fm.park(c, e)
+                    continue
                 j = tstate[uid].active
                 if j is None or j.remaining.get(c, 0.0) <= _EPS_W:
                     heapq.heappop(h)
                     continue
                 return threads[(uid, c)]
+            return None
+
+        def has_work(uid: int, core: int) -> bool:
+            j = tstate[uid].active
+            return j is not None and j.remaining.get(core, 0.0) > _EPS_W
+
+        def find_job(uid: int, idx: int):
+            for j in tstate[uid].queue:
+                if j.index == idx:
+                    return j
             return None
 
         # ---- scheduling fixed point (mirrors sim.py's pass loop) ----
@@ -297,10 +344,12 @@ class EventEngine:
             for c in cores:
                 if mat[c] < now:
                     materialize(c, now)
-                stalled = mm.refresh_core(c, current[c], be_names[c],
+                occ = current[c] if current[c] is not None \
+                    else fm.dem_thread(c)
+                stalled = mm.refresh_core(c, occ, be_names[c],
                                           be_rate[c], now)
                 if stalled and not rt_stalled[c]:
-                    stall_label[c] = "throttled:" + current[c].task.name
+                    stall_label[c] = "throttled:" + occ.task.name
                 rt_stalled[c] = stalled
 
         def reconcile(push_set, now: float) -> None:
@@ -313,7 +362,8 @@ class EventEngine:
             if mm.agg_epoch != mm_epoch:
                 mm_epoch = mm.agg_epoch
                 for c in range(n):
-                    th = current[c]
+                    th = current[c] if current[c] is not None \
+                        else fm.dem_thread(c)
                     if th is None or rt_stalled[c]:
                         continue
                     s = mm.slowdown(th.task.name, c)
@@ -323,7 +373,8 @@ class EventEngine:
                         push_set.add(c)
             else:
                 for c in tuple(push_set):
-                    th = current[c]
+                    th = current[c] if current[c] is not None \
+                        else fm.dem_thread(c)
                     if th is not None and not rt_stalled[c]:
                         slow[c] = mm.slowdown(th.task.name, c)
 
@@ -351,8 +402,44 @@ class EventEngine:
                     if rt_sig[c] != s:
                         rt_sig[c] = s
                         push(now + j.remaining[c] * slow[c], _COMPLETE, c)
+                        # work-budget crossing (faults.py): predicted at
+                        # the instant the remaining work sinks to the
+                        # over-threshold; validated at pop so stale
+                        # predictions (slowdown changed, stalled) are
+                        # harmless
+                        ov = fm.over_threshold(th.task.uid, j.index, c)
+                        if ov is not None and j.remaining[c] > ov + _EPS_W:
+                            te = now + (j.remaining[c] - ov) * slow[c]
+                            if te <= horizon + _EPS_T:
+                                push(te, _ENFORCE, (th.task.uid, j.index))
                     trip = mm.next_trip_time(c, now)
                     s = ("rt-run", th.task.uid, j.index, mm.rates[c],
+                         reg.cores[c].budget, trip)
+                    if chg_sig[c] != s:
+                        chg_sig[c] = s
+                        core_epoch[c] += 1
+                        if trip != _INF and trip < horizon + _EPS_T:
+                            push(trip, _EXHAUST, (c, core_epoch[c]))
+                    continue
+                dth = fm.dem_thread(c)
+                if dth is not None:
+                    d = fm.dem_head(c)
+                    if rt_stalled[c]:
+                        st = reg.cores[c]
+                        s = ("dem-stalled", st.stalled_until)
+                        if chg_sig[c] != s:
+                            chg_sig[c] = s
+                            core_epoch[c] += 1
+                            push(st.stalled_until, _UNSTALL, c)
+                        rt_sig[c] = None
+                        continue
+                    s = ("dem", dth.task.uid, d.index, slow[c])
+                    if rt_sig[c] != s:
+                        rt_sig[c] = s
+                        push(now + d.residual[c] * slow[c],
+                             _DEMCOMPLETE, c)
+                    trip = mm.next_trip_time(c, now)
+                    s = ("dem-run", dth.task.uid, d.index, mm.rates[c],
                          reg.cores[c].budget, trip)
                     if chg_sig[c] != s:
                         chg_sig[c] = s
@@ -411,9 +498,72 @@ class EventEngine:
                     response[th.task.name].append(rt)
                     if rt > th.task.deadline + 1e-9:
                         misses[th.task.name] += 1
+                        miss_times[th.task.name].append(now)
                     ts.queue.popleft()
                     if ts.queue:
                         activate(ts.queue[0])
+                    restore_from(th.task.uid, j.index)
+
+        # ---- enforcement mechanics (faults.py, DESIGN.md §11) -------
+        def restore_from(uid: int, idx: int) -> None:
+            """If (uid, idx) was the degrading job, lift the suspension:
+            re-arm parked ready entries and reschedule the restored
+            tasks' cores."""
+            res = fm.maybe_restore(uid, idx)
+            if res is None:
+                return
+            parked, sus = res
+            for c, entries in parked.items():
+                for e in entries:
+                    heapq.heappush(ready[c], e)
+                dirty.add(c)
+                changed.add(c)
+            for u in sus:
+                for c in tstate[u].task.cores:
+                    dirty.add(c)
+                    changed.add(c)
+
+        def apply_enforcement(action: str, j, now: float) -> None:
+            """Apply a FaultManager decision: settle the job's cores,
+            then degrade (suspend lower-criticality gangs), demote
+            (snapshot the residual), or abort — the latter two take the
+            job off the RT path; the scheduling fixed point that follows
+            releases its gang-lock cores through the normal pick path."""
+            t = j.task
+            ts = tstate[t.uid]
+            for c in t.cores:
+                if mat[c] < now:
+                    materialize(c, now)
+            if action == "degrade":
+                sus = fm.begin_degrade(j, tasks)
+                for u in sus:
+                    for c in tstate[u].task.cores:
+                        dirty.add(c)
+                        changed.add(c)
+                return
+            if action == "demote":
+                # snapshot the residual before zeroing
+                fm.begin_demote(j, now)
+            for c in t.cores:
+                j.remaining[c] = 0.0
+            if action == "abort":
+                j.aborted = True
+                fm.record_abort(j, now)
+            if ts.queue and ts.queue[0] is j:
+                ts.queue.popleft()
+                if ts.queue:
+                    activate(ts.queue[0])
+            else:
+                try:
+                    ts.queue.remove(j)
+                except ValueError:
+                    pass
+            if action == "abort":
+                restore_from(t.uid, j.index)
+            for c in t.cores:
+                dirty.add(c)
+                changed.add(c)
+                rt_sig[c] = None
 
         def timed(key, t_p, a0):
             phase_wall[key] += (perf() - t_p) - (phase_wall["advance"] - a0)
@@ -461,16 +611,54 @@ class EventEngine:
                             changed.add(c)
                         else:
                             mm.trip(c, now)
-                            if th is not None:
+                            occ = th if th is not None \
+                                else fm.dem_thread(c)
+                            if occ is not None:
                                 stall_label[c] = ("throttled:"
-                                                  + th.task.name)
+                                                  + occ.task.name)
                             elif be_cands[c]:
                                 heavy = max(be_cands[c],
                                             key=lambda b: b.mem_rate)
                                 stall_label[c] = "throttled:" + heavy.name
                             changed.add(c)
-                else:                    # _UNSTALL: pure wakeup
+                elif kind == _UNSTALL:   # pure wakeup
                     changed.add(data)
+                elif kind == _ENFORCE:
+                    uid, idx = data
+                    j = find_job(uid, idx)
+                    if j is not None and not j.aborted:
+                        for c in j.task.cores:
+                            if mat[c] < now:
+                                materialize(c, now)
+                        # completion at the same instant wins (the
+                        # quantum engine's advance-then-enforce order)
+                        via = fm.due(j, now) if not j.done else None
+                        if via is not None:
+                            action = fm.fire(j, now, via)
+                            if action is not None:
+                                apply_enforcement(action, j, now)
+                elif kind == _WATCHDOG:
+                    uid, idx = data
+                    j = find_job(uid, idx)
+                    if j is not None and not j.aborted:
+                        for c in j.task.cores:
+                            if mat[c] < now:
+                                materialize(c, now)
+                        action = None if j.done else \
+                            fm.fire(j, now, "watchdog")
+                        if action is not None:
+                            apply_enforcement(action, j, now)
+                else:                    # _DEMCOMPLETE
+                    c = data
+                    if mat[c] < now:
+                        materialize(c, now)
+                    d = fm.dem_head(c)
+                    if d is not None and current[c] is None and \
+                            d.residual.get(c, 1.0) <= _EPS_W:
+                        fm.dem_finish_core(c, now)
+                        dirty.add(c)
+                        changed.add(c)
+                        rt_sig[c] = None
             if comp:
                 detect_completions(comp, now)
             if profile:
@@ -484,6 +672,10 @@ class EventEngine:
                 t_p, a0 = perf(), phase_wall["advance"]
             touched = fixed_point(now)
             changed.update(touched)
+            if fm.pending_audit:
+                # the scheduling round after an abort/demote settled:
+                # the gang lock must have left the dead job's cores
+                fm.audit(sched.g, has_work)
             if profile:
                 timed("fixed_point", t_p, a0)
                 t_p, a0 = perf(), phase_wall["advance"]
@@ -524,4 +716,7 @@ class EventEngine:
             ipis=sched.g.ipis_sent, preemptions=sched.g.preemptions,
             slack_time=slack, horizon=horizon,
             events=self.events_processed, engine="event",
-            reclaimed=reg.total_reclaimed)
+            reclaimed=reg.total_reclaimed,
+            miss_times=miss_times,
+            faults=fm.summary()
+            if (fm.enf is not None or fm.plan.faults) else None)

@@ -64,6 +64,16 @@ class RTJob:
     # regulation window on denial — the executor analogue of the
     # engines' RT-thread charging (DESIGN.md §10.1). 0 = never gated.
     bytes_per_quantum: float = 0.0
+    # declared wall-clock WCET of one quantum (seconds). Feeds the
+    # glock mirror task and — with the executor's ``watchdog_factor`` —
+    # the per-quantum watchdog deadline (DESIGN.md §11.4).
+    wcet_s: Optional[float] = None
+    # explicit per-quantum watchdog deadline (seconds): a quantum still
+    # in flight this long after dispatch has its whole gang aborted so
+    # a hung member thread cannot deadlock the gang-isolation barrier.
+    # None = derive from wcet_s x watchdog_factor, or the executor-wide
+    # ``watchdog_s`` default.
+    watchdog_s: Optional[float] = None
     uid: int = dataclasses.field(default_factory=lambda: next(_uid))
 
 
@@ -84,6 +94,7 @@ class _JobInstance:
     remaining_lanes: set
     start: Optional[float] = None
     finish: Optional[float] = None
+    aborted: bool = False          # watchdog killed this gang release
 
 
 class GangExecutor:
@@ -91,7 +102,9 @@ class GangExecutor:
                  regulation_interval_s: float = 0.010,
                  straggler_factor: float = 3.0,
                  backup_dispatch: bool = False,
-                 budget_policy=None, reclaim: bool = False):
+                 budget_policy=None, reclaim: bool = False,
+                 watchdog_s: Optional[float] = None,
+                 watchdog_factor: Optional[float] = None):
         """``budget_policy``: optional object with ``apply(glock,
         regulator)`` — the same interface ``Simulator`` takes
         (vgang/sched.py) — invoked from the gang-change hook to set
@@ -102,7 +115,19 @@ class GangExecutor:
         ``reclaim``: mid-window bandwidth donation (DESIGN.md §7.5) at
         admission granularity — a gated sibling quantum that would be
         denied first draws the unspent window quota of member lanes
-        whose work for this release already retired."""
+        whose work for this release already retired.
+
+        ``watchdog_s`` / ``watchdog_factor`` arm the per-lane wall-clock
+        watchdog (DESIGN.md §11.4): a quantum still in flight past its
+        deadline — ``job.watchdog_s``, else ``watchdog_factor x
+        job.wcet_s``, else ``watchdog_s`` — has its whole gang aborted:
+        the instance is marked, the gang's glock hold is released lane
+        by lane through ``pick_next_task_rt`` (so budget floors and
+        wakeups run in the normal gang-change hook order) and the hung
+        lane retires from the gang-isolation barrier, unblocking waiting
+        gangs. The hung callable itself cannot be killed — it keeps
+        running on its worker thread and its eventual return is
+        discarded — but it no longer holds any scheduling state."""
         self.n_lanes = n_lanes
         self.enabled = enabled
         self.budget_policy = budget_policy
@@ -150,6 +175,13 @@ class GangExecutor:
         # (the executor analogue of the preemption IPI + context switch;
         # bounded by one quantum = the B_i blocking term in core/rta.py).
         self._inflight: Dict[int, int] = {}
+        # watchdog bookkeeping: lane -> (job uid, instance idx, dispatch
+        # time, deadline or None), maintained exactly alongside _inflight
+        self.watchdog_s = watchdog_s
+        self.watchdog_factor = watchdog_factor
+        self._inflight_info: Dict[int, tuple] = {}
+        self.watchdog_aborts: List[Tuple[str, int, int, float]] = []
+        self.aborted: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def submit_rt(self, job: RTJob):
@@ -165,9 +197,13 @@ class GangExecutor:
         self._instances[job.uid] = []
         self.response_times.setdefault(job.name, [])
         # mirror as an RTTask (same uid!) so the glock state machine sees
-        # gang identity and picked.task.uid maps back to the job
+        # gang identity and picked.task.uid maps back to the job. The
+        # mirror's wcet is the declared quantum wall time (sim-ms scale);
+        # undeclared jobs get a positive placeholder — the glock never
+        # reads it, and RTTask rejects wcet <= 0 at construction.
         self._tasks[job.uid] = RTTask(
-            name=job.name, wcet=0.0, period=(job.period_s or 1e9) * 1e3,
+            name=job.name, wcet=max(job.wcet_s or 0.0, 1e-9) * 1e3,
+            period=(job.period_s or 1e9) * 1e3,
             cores=job.lanes, prio=job.prio, mem_budget=job.budget_bytes,
             uid=job.uid)
         for i, lane in enumerate(job.lanes):
@@ -313,6 +349,7 @@ class GangExecutor:
         drain — the caller must then run ``_end_drain``."""
         with self._wake:
             self._inflight.pop(lane, None)
+            self._inflight_info.pop(lane, None)
             drain_done = bool(self._draining) and not any(
                 p in self._draining for p in self._inflight.values())
             if drain_done:
@@ -534,6 +571,73 @@ class GangExecutor:
                                   require_full=True)
 
     # ------------------------------------------------------------------
+    # watchdog (DESIGN.md §11.4)
+
+    def _watchdog_deadline(self, job: RTJob) -> Optional[float]:
+        """Wall-clock in-flight deadline for one quantum of ``job``."""
+        if job.watchdog_s is not None:
+            return job.watchdog_s
+        if self.watchdog_factor is not None and job.wcet_s is not None:
+            return self.watchdog_factor * job.wcet_s
+        return self.watchdog_s
+
+    def _watchdog_armed(self) -> bool:
+        return self.watchdog_s is not None or any(
+            self._watchdog_deadline(j) is not None for j in self.rt_jobs)
+
+    def _watchdog_monitor(self, tick: float):
+        while True:
+            with self._wake:
+                if self._stop:
+                    return
+                now = self._now()
+                victims = [(ln, info[0], info[1])
+                           for ln, info in self._inflight_info.items()
+                           if info[3] is not None and now - info[2] > info[3]]
+            for ln, uid, idx in victims:
+                self._watchdog_abort(ln, uid, idx)
+            time.sleep(tick)
+
+    def _watchdog_abort(self, lane: int, uid: int, idx: int) -> bool:
+        """Abort the gang release whose quantum is hung on ``lane``:
+        mark the instance aborted (siblings' pending entries go stale
+        and their in-flight returns are discarded), release every lane
+        the gang still holds through ``pick_next_task_rt`` — i.e.
+        through the glock state machine, so ``try_glock_release`` fires
+        the gang-change hook and budget floors / wakeups happen in the
+        normal hook order (glock.py "watchdog ordering") — then retire
+        the hung lane from the gang-isolation barrier. Lock order:
+        instance state under self._lock first, then g.lock via the pick
+        (never nested the other way)."""
+        with self._wake:
+            info = self._inflight_info.get(lane)
+            if info is None or info[0] != uid or info[1] != idx:
+                return False         # retired between scan and abort
+        job = self._jobs[uid]
+        with self._lock:
+            inst = self._instances[uid][idx]
+            # a second hung lane of an already-aborted gang still needs
+            # retiring from the barrier below; only the marking and the
+            # glock release are once-per-instance
+            first = not inst.aborted and inst.finish is None
+            if first:
+                inst.aborted = True
+                inst.remaining_lanes.clear()
+                self.watchdog_aborts.append(
+                    (job.name, lane, idx, self._now()))
+                self.aborted[job.name] = \
+                    self.aborted.get(job.name, 0) + 1
+        if first:
+            g = self.sched.g
+            for ln in job.lanes:
+                th = self._threads.get((uid, ln))
+                if th is not None and g.gthreads[ln] is th:
+                    self.sched.pick_next_task_rt(ln, th, None)
+        if self._quantum_retired(lane):
+            self._end_drain()
+        return first
+
+    # ------------------------------------------------------------------
     def _worker(self, lane: int):
         prev: Optional[Thread] = None
         while True:
@@ -570,6 +674,9 @@ class GangExecutor:
                                   if ln != lane and p != job.prio]
                         if not others:
                             self._inflight[lane] = job.prio
+                            self._inflight_info[lane] = (
+                                job.uid, inst.index, self._now(),
+                                self._watchdog_deadline(job))
                             break
                         self._wake.wait(timeout=0.05)
                 t0 = self._now()
@@ -599,6 +706,14 @@ class GangExecutor:
                 dur = t1 - t_run
                 key = job.name
                 with self._lock:
+                    if inst.aborted:
+                        # the watchdog killed this gang release while we
+                        # ran: the late return is discarded — no sample,
+                        # no EMA poisoning, no finish
+                        self.trace.record(lane, f"aborted:{key}",
+                                          t0 * 1e3, t1 * 1e3)
+                        prev = picked
+                        continue
                     if stalled:              # admission stall (§2.4)
                         self.trace.record(lane, f"throttled:{key}",
                                           t0 * 1e3, t_run * 1e3)
@@ -653,6 +768,14 @@ class GangExecutor:
                    for lane in range(self.n_lanes)]
         for w in workers:
             w.start()
+        if self._watchdog_armed():
+            deadlines = [d for d in (self._watchdog_deadline(j)
+                                     for j in self.rt_jobs)
+                         if d is not None]
+            tick = min(deadlines) / 4 if deadlines else 0.01
+            threading.Thread(target=self._watchdog_monitor,
+                             args=(min(max(tick, 0.001), 0.05),),
+                             daemon=True).start()
         time.sleep(duration_s)
         with self._wake:
             self._stop = True
@@ -669,4 +792,6 @@ class GangExecutor:
             "acquisitions": self.sched.g.acquisitions,
             "ipis": self.sched.g.ipis_sent,
             "reclaimed_bytes": self.reg.total_reclaimed,
+            "watchdog_aborts": list(self.watchdog_aborts),
+            "aborted": dict(self.aborted),
         }

@@ -64,7 +64,62 @@ class RTTask:
     release_offset: float = 0.0
     n_jobs: Optional[int] = None          # None = unbounded
     wcet_per_core: Optional[Dict[int, float]] = None
+    # mixed-criticality level for degraded-mode enforcement
+    # (core/faults.py): under ``degrade``, gangs with strictly lower
+    # criticality than an overrunning gang are suspended until it
+    # completes. 0 = lowest (default).
+    criticality: int = 0
     uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    def __post_init__(self):
+        # construction-time declaration validation (ROADMAP item 5,
+        # first slice): reject unambiguous nonsense with a clear error
+        # instead of producing a garbage schedule. WCET > period is
+        # deliberately NOT rejected here — analysis code legitimately
+        # builds single-core-equivalent tasks whose inflated WCET
+        # exceeds the period (that is exactly how vgang RTA reports an
+        # unschedulable formation) and the acceptance grid simulates
+        # overloaded sets; use ``validate_declared`` for the strict
+        # check where declarations must be trustworthy (enforcement
+        # budgets, config ingestion).
+        if not self.cores:
+            raise ValueError(f"task {self.name!r} pins no cores")
+        if len(set(self.cores)) != len(self.cores):
+            raise ValueError(
+                f"task {self.name!r} pins a core twice: {self.cores}")
+        if not self.wcet > 0.0:
+            raise ValueError(
+                f"task {self.name!r}: wcet must be > 0, got {self.wcet}")
+        if not self.period > 0.0:
+            raise ValueError(
+                f"task {self.name!r}: period must be > 0, "
+                f"got {self.period}")
+        if self.wcet_per_core:
+            for c, w in self.wcet_per_core.items():
+                if not w > 0.0:
+                    raise ValueError(
+                        f"task {self.name!r}: wcet_per_core[{c}] must be "
+                        f"> 0, got {w}")
+        if not 0.0 <= self.mem_intensity <= 1.0:
+            raise ValueError(
+                f"task {self.name!r}: mem_intensity must be in [0, 1], "
+                f"got {self.mem_intensity}")
+        if self.mem_rate is not None and self.mem_rate < 0.0:
+            raise ValueError(
+                f"task {self.name!r}: mem_rate must be >= 0, "
+                f"got {self.mem_rate}")
+        if self.mem_budget < 0.0:
+            raise ValueError(
+                f"task {self.name!r}: mem_budget must be >= 0, "
+                f"got {self.mem_budget}")
+        if self.release_offset < 0.0:
+            raise ValueError(
+                f"task {self.name!r}: release_offset must be >= 0, "
+                f"got {self.release_offset}")
+        if self.n_jobs is not None and self.n_jobs < 0:
+            raise ValueError(
+                f"task {self.name!r}: n_jobs must be >= 0, "
+                f"got {self.n_jobs}")
 
     @property
     def traffic_rate(self) -> float:
@@ -110,6 +165,14 @@ class BETask:
     mem_rate: float = 0.0
     uid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
+    def __post_init__(self):
+        if not self.cores:
+            raise ValueError(f"BE task {self.name!r} pins no cores")
+        if self.mem_rate < 0.0:
+            raise ValueError(
+                f"BE task {self.name!r}: mem_rate must be >= 0, "
+                f"got {self.mem_rate}")
+
 
 def make_virtual_gang(name: str, members: Sequence[RTTask], prio: int,
                       mem_budget: float = 0.0) -> List[RTTask]:
@@ -120,6 +183,25 @@ def make_virtual_gang(name: str, members: Sequence[RTTask], prio: int,
         out.append(dataclasses.replace(t, prio=prio, mem_budget=mem_budget,
                                        name=t.name))
     return out
+
+
+def validate_declared(tasks: Sequence[RTTask]) -> None:
+    """Strict declaration check for consumers that must *trust* the
+    declarations (enforcement budgets derived from WCET — core/faults.py
+    — and config ingestion): on top of construction-time validation,
+    every declared per-thread WCET must fit the implicit deadline
+    (= period). Kept separate from ``RTTask.__post_init__`` because the
+    RTA layer legitimately constructs inflated-WCET equivalent tasks
+    with wcet > period to *report* unschedulability."""
+    for t in tasks:
+        for c in t.cores:
+            w = t.thread_wcet(c)
+            if w > t.period + 1e-12:
+                raise ValueError(
+                    f"task {t.name!r}: declared WCET {w} on core {c} "
+                    f"exceeds its period/deadline {t.period} — an "
+                    f"enforcement budget derived from this declaration "
+                    f"would be meaningless")
 
 
 def validate_taskset(tasks: Sequence[RTTask]) -> None:

@@ -194,6 +194,44 @@ class GangScheduler:
             g.blocked_cores = g._set(g.blocked_cores, cpu)
             return None
 
+    # ---- enforcement / watchdog support (DESIGN.md §11) -----------------------
+    #
+    # Watchdog ordering: an overrun/watchdog abort never mutates glock
+    # state directly. The enforcer (FaultManager in the engines, the
+    # executor's watchdog monitor) marks the faulty job dead and then
+    # routes every held core through ``pick_next_task_rt(cpu, prev=
+    # <held thread>, next=...)`` — the ready queue no longer offers the
+    # dead job, so line 11's ``try_glock_release`` drops the core and,
+    # on the last member, releases the lock. This keeps the abort on
+    # the exact same code path as a natural departure: the gang-change
+    # hook fires in its normal order ("leave" per surviving member
+    # churn, then "release" or a successor's "acquire"), so budget
+    # floors, reclaim-grant voiding, and barrier wakeups cannot be
+    # reordered against lock ownership. ``force_release`` below is the
+    # one-call wrapper for that pattern.
+
+    def force_release(self, thread: Thread) -> List[int]:
+        """Evict ``thread`` from every core it holds by driving each
+        through the normal pick path with no successor offered (the
+        caller must already have removed its job from the ready
+        queues). Returns the cores released."""
+        g = self.g
+        with g.lock:
+            held = [c for c in g.cores_in(g.locked_cores)
+                    if g.gthreads[c] is thread]
+        out = []
+        for c in held:
+            if self.pick_next_task_rt(c, thread, None) is None:
+                out.append(c)
+        return out
+
+    def holds(self, task: RTTask) -> List[int]:
+        """Cores on which the glock currently holds a thread of
+        ``task`` (enforcement audits: after an abort settles, this must
+        be empty unless a live successor job re-acquired)."""
+        return [c for c, th in enumerate(self.g.gthreads)
+                if th is not None and th.task.uid == task.uid]
+
     # ---- invariant (for property tests) ----------------------------------------
     def running_gang_prios(self) -> Set[int]:
         return {t.task.prio for t in self.g.gthreads if t is not None}

@@ -18,7 +18,9 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.gang import BETask, RTTask, Thread, validate_taskset
+from repro.core.faults import Enforcement, FaultManager, FaultPlan
+from repro.core.gang import (BETask, RTTask, Thread, validate_declared,
+                             validate_taskset)
 from repro.core.glock import GangScheduler
 from repro.core.memmodel import BE, MemoryModel
 from repro.core.throttle import BandwidthRegulator
@@ -33,6 +35,7 @@ class Job:
     index: int
     start: Optional[float] = None
     finish: Optional[float] = None
+    aborted: bool = False                # enforcement killed this job
 
     @property
     def done(self) -> bool:
@@ -72,6 +75,11 @@ class SimResult:
     events: int = 0                      # event-engine: events processed
     engine: str = "quantum"              # "quantum" (dt-stepped) | "event"
     reclaimed: float = 0.0               # traffic units drawn from donors
+    # absolute times of each deadline miss (including enforcement
+    # aborts, stamped at the abort instant) — keyed like deadline_misses
+    miss_times: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    faults: Optional[Dict] = None        # FaultManager.summary() when armed
 
     def wcrt(self, name: str) -> float:
         rs = self.response_times.get(name) or [float("nan")]
@@ -109,7 +117,9 @@ class Simulator:
                  regulation_interval: float = 1.0,
                  dt: Optional[float] = 0.05,
                  budget_policy: Optional["BudgetPolicy"] = None,
-                 reclaim: bool = False):
+                 reclaim: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 enforcement: Optional[Enforcement] = None):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
         same SimResult, O(events) instead of O(horizon/dt).
@@ -128,8 +138,24 @@ class Simulator:
         ``None`` to force a conservative all-cores refresh. Virtual
         gangs use it to enforce the minimum budget over co-running
         member gangs, and RTG-throttle to cap sibling members
-        (vgang/sched.py)."""
+        (vgang/sched.py).
+
+        ``fault_plan`` / ``enforcement``: seeded fault injection and
+        runtime overrun enforcement (core/faults.py, DESIGN.md §11) —
+        both engines drive the same FaultManager, so injected faults
+        and enforcement decisions are engine-identical. Passing an
+        ``enforcement`` policy additionally runs the strict
+        ``validate_declared`` check: enforcement budgets are derived
+        from declarations, so the declarations must be trustworthy."""
         validate_taskset(rt_tasks)
+        if not regulation_interval > 0.0:
+            raise ValueError(
+                f"regulation_interval must be > 0, "
+                f"got {regulation_interval}")
+        if dt is not None and not dt > 0.0:
+            raise ValueError(f"dt must be > 0 (or None), got {dt}")
+        if enforcement is not None:
+            validate_declared(rt_tasks)
         self.n_cores = n_cores
         self.rt_tasks = list(rt_tasks)
         self.be_tasks = list(be_tasks)
@@ -150,8 +176,16 @@ class Simulator:
             for c in range(n_cores)]
         self.be_names = [tuple(b.name for b in cands)
                          for cands in self.be_cands]
+        # fault injection + enforcement state machine (shared by both
+        # engines; a no-op shell when neither plan nor policy is given)
+        self.fm = FaultManager(rt_tasks, fault_plan, enforcement)
+        self.fm.install(self.reg)
+        # a lying BE task charges its *actual* (inflated) traffic — the
+        # regulator contains the overrun by construction
+        bef = self.fm.plan.be_factor
         self.be_share_rate = [
-            sum(b.mem_rate for b in cands) / len(cands) if cands else 0.0
+            sum(b.mem_rate * bef(b.name) for b in cands) / len(cands)
+            if cands else 0.0
             for cands in self.be_cands]
 
     def apply_budget_rule(self):
@@ -196,6 +230,10 @@ class Simulator:
         mm = self.mm
         response: Dict[str, List[float]] = {t.name: [] for t in self.rt_tasks}
         misses = {t.name: 0 for t in self.rt_tasks}
+        miss_times: Dict[str, List[float]] = {t.name: []
+                                              for t in self.rt_tasks}
+        fm = self.fm
+        fm.bind(misses, miss_times, response)
         slack = 0.0
 
         def release_jobs(now: float):
@@ -205,9 +243,10 @@ class Simulator:
                     continue
                 next_rel = t.release_offset + done_jobs * t.period
                 if now + 1e-9 >= next_rel:
-                    jobs[t.uid].append(Job(
-                        task=t, release=next_rel, index=done_jobs,
-                        remaining={c: t.thread_wcet(c) for c in t.cores}))
+                    j = Job(task=t, release=next_rel, index=done_jobs,
+                            remaining={c: t.thread_wcet(c) for c in t.cores})
+                    fm.on_release(j)
+                    jobs[t.uid].append(j)
 
         def active_job(t: RTTask) -> Optional[Job]:
             for j in jobs[t.uid]:
@@ -215,10 +254,14 @@ class Simulator:
                     return j
             return None
 
+        def has_work(uid: int, core: int) -> bool:
+            j = active_job(fm.tasks[uid])
+            return j is not None and j.remaining.get(core, 0.0) > 1e-12
+
         def ready_thread(core: int) -> Optional[Thread]:
             best: Optional[Thread] = None
             for t in self.rt_tasks:
-                if core not in t.cores:
+                if core not in t.cores or t.uid in fm.suspended:
                     continue
                 j = active_job(t)
                 if j is None or j.remaining.get(core, 0) <= 1e-12:
@@ -257,6 +300,10 @@ class Simulator:
                         self.sched.enabled and \
                         self.sched.g.gthreads[c] is not current[c]:
                     current[c] = self.sched.g.gthreads[c]
+            # lock-leak audit: an abort/demote in the previous step must
+            # have left the gang lock by the time this step's pass settles
+            if fm.pending_audit:
+                fm.audit(self.sched.g, has_work)
 
             # set throttle budgets from the running gang / budget policy
             self.apply_budget_rule()
@@ -270,7 +317,12 @@ class Simulator:
             # and pause mid-job while their core's budget is tripped.
             rt_stalled = set()
             for c in range(self.n_cores):
-                if mm.refresh_core(c, current[c], be_names[c], be_agg[c],
+                # a demoted residual occupies an otherwise-free core as
+                # an RT-kind occupant (charges its own traffic, stalls
+                # under the ambient budget)
+                occ = current[c] if current[c] is not None \
+                    else fm.dem_thread(c)
+                if mm.refresh_core(c, occ, be_names[c], be_agg[c],
                                    now):
                     rt_stalled.add(c)
             if self.reg.reclaim and rt_stalled:
@@ -278,8 +330,10 @@ class Simulator:
                 # pool (a donor may have gone idle); a granted draw
                 # lifts the stall and the thread resumes this quantum —
                 # the same instant the event engine resumes it
+                # (demoted residuals never claim: they are best-effort)
                 for c in sorted(rt_stalled):
-                    if mm.claim_lift(c, current[c].task, now):
+                    if current[c] is not None and \
+                            mm.claim_lift(c, current[c].task, now):
                         rt_stalled.discard(c)
                         mm.refresh_core(c, current[c], be_names[c],
                                         be_agg[c], now)
@@ -288,6 +342,34 @@ class Simulator:
             for c in range(self.n_cores):
                 th = current[c]
                 if th is None:
+                    d = fm.dem_head(c)
+                    if d is not None:
+                        # demoted residual: drains ahead of BE fillers
+                        # whenever the core is free, under the ambient
+                        # throttle budget; not counted as slack
+                        if c in rt_stalled:
+                            self.trace.record(
+                                c, "throttled:" + d.task.name, now,
+                                now + dt)
+                            continue
+                        frac = mm.charge_quantum(c, dt, now)
+                        if frac <= 0.0:
+                            self.trace.record(
+                                c, "throttled:" + d.task.name, now,
+                                now + dt)
+                            continue
+                        slow = mm.slowdown(d.task.name, c)
+                        d.residual[c] = max(
+                            0.0, d.residual[c] - dt * frac / slow)
+                        self.trace.record(c, "dem:" + d.task.name, now,
+                                          now + dt * frac)
+                        if frac < 1.0:
+                            self.trace.record(
+                                c, "throttled:" + d.task.name,
+                                now + dt * frac, now + dt)
+                        if d.residual[c] <= 1e-12:
+                            fm.dem_finish_core(c, now + dt)
+                        continue
                     slack += dt
                     cands = be_cands[c]
                     if mm.kind[c] == BE:
@@ -335,9 +417,40 @@ class Simulator:
                                       now + dt * frac, now + dt)
                 if j.done and j.finish is None:
                     j.finish = now + dt
-                    response[th.task.name].append(j.response_time())
-                    if j.response_time() > th.task.deadline + 1e-9:
+                    rt = j.response_time()
+                    response[th.task.name].append(rt)
+                    if rt > th.task.deadline + 1e-9:
                         misses[th.task.name] += 1
+                        miss_times[th.task.name].append(now + dt)
+                    # if this was the degrading job, lift the suspension
+                    fm.maybe_restore(th.task.uid, j.index)
+
+            # ---- overrun enforcement (work budgets + watchdog) ----------
+            if fm.enf is not None:
+                t_end = now + dt
+                for t in self.rt_tasks:
+                    for j in jobs[t.uid]:
+                        if j.done or j.aborted:
+                            continue
+                        via = fm.due(j, t_end)
+                        if via is None:
+                            continue
+                        action = fm.fire(j, t_end, via)
+                        if action is None:
+                            continue
+                        if action == "degrade":
+                            fm.begin_degrade(j, self.rt_tasks)
+                            continue
+                        if action == "demote":
+                            # snapshot the residual before zeroing
+                            fm.begin_demote(j, t_end)
+                        else:
+                            j.aborted = True
+                            fm.record_abort(j, t_end)
+                        for c in j.remaining:
+                            j.remaining[c] = 0.0
+                        if j.aborted:
+                            fm.maybe_restore(t.uid, j.index)
 
         throttle_events = sum(st.throttle_events
                               for st in self.reg.cores.values())
@@ -348,4 +461,7 @@ class Simulator:
             ipis=self.sched.g.ipis_sent,
             preemptions=self.sched.g.preemptions,
             slack_time=slack, horizon=horizon,
-            reclaimed=self.reg.total_reclaimed)
+            reclaimed=self.reg.total_reclaimed,
+            miss_times=miss_times,
+            faults=fm.summary()
+            if (fm.enf is not None or fm.plan.faults) else None)

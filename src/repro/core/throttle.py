@@ -60,6 +60,12 @@ class ThrottleState:
     throttle_events: int = 0
     total_used: float = 0.0
     total_denied: float = 0.0
+    # worst observed charge past the per-window limit (the enforcement
+    # invariant ``used <= limit`` up to one accounting quantum; the
+    # event engine's closed-form charging keeps this at float epsilon,
+    # the quantum engine at one reactive overshoot <= rate x dt, and
+    # admission mode at exactly 0 — asserted by tests/test_faults.py)
+    max_overrun: float = 0.0
 
     @property
     def limit(self) -> float:
@@ -80,6 +86,11 @@ class BandwidthRegulator:
         self.interval = interval
         self.reclaim = reclaim
         self.total_reclaimed = 0.0   # units drawn from donors, lifetime
+        # fault-injection hook (core/faults.py "lost wakeup"): every
+        # stall routes its stall-until through this callable(core, t) ->
+        # t', so a fault plan can delay or drop the window-end wakeup.
+        # None = stalls land exactly at the window boundary.
+        self.stall_fault = None
         self.cores: Dict[int, ThrottleState] = {
             c: ThrottleState(budget=float("inf"), interval=interval)
             for c in range(n_cores)}
@@ -127,6 +138,33 @@ class BandwidthRegulator:
                 changed.add(c)
         return changed
 
+    def _set_stall(self, core: int, st: ThrottleState) -> None:
+        """Stall ``core`` until the end of its current window, routed
+        through the ``stall_fault`` hook (a lost-wakeup fault extends
+        the stall past the boundary). Every stall site goes through
+        here so the fault applies uniformly in both engines and the
+        executor."""
+        until = st.window_start + st.interval
+        if self.stall_fault is not None:
+            until = self.stall_fault(core, until)
+        st.stalled_until = until
+
+    def _note_overrun(self, st: ThrottleState, before: float) -> None:
+        """Record how far a *charge* pushed usage past the limit.
+        Pre-existing excess (``before`` already over: a mid-window
+        budget cut below consumed quota, which ``is_stalled`` converts
+        to an immediate stall) is the regime's doing, not a charging
+        overrun, and is excluded."""
+        if st.budget == _INF or before > st.limit + 1e-12:
+            return
+        over = st.used - st.limit
+        if over > st.max_overrun:
+            st.max_overrun = over
+
+    def max_overrun(self) -> float:
+        """Worst charge past a per-window limit across all cores."""
+        return max(st.max_overrun for st in self.cores.values())
+
     def _roll_window(self, st: ThrottleState, now: float) -> None:
         delta = now - st.window_start
         if delta >= st.interval:
@@ -168,7 +206,7 @@ class BandwidthRegulator:
             if st.used + amount > limit:
                 st.throttle_events += 1
                 st.total_denied += amount
-                st.stalled_until = st.window_start + st.interval
+                self._set_stall(core, st)
                 return 0.0
             st.used += amount
             st.total_used += amount
@@ -178,7 +216,8 @@ class BandwidthRegulator:
         st.total_used += amount
         if st.used > limit:
             st.throttle_events += 1
-            st.stalled_until = st.window_start + st.interval
+            self._note_overrun(st, before)
+            self._set_stall(core, st)
             if amount <= 0.0:
                 return 0.0
             return max(0.0, min(1.0, (limit - before) / amount))
@@ -198,7 +237,7 @@ class BandwidthRegulator:
             return True
         if st.used > st.limit + 1e-12:
             st.throttle_events += 1
-            st.stalled_until = st.window_start + st.interval
+            self._set_stall(core, st)
             return True
         return False
 
@@ -228,11 +267,14 @@ class BandwidthRegulator:
         self._roll_window(st, t0)
         amount = rate * (t1 - t0)
         if t1 < st.window_start + st.interval:
+            before = st.used
             st.used += amount
         else:
             self._roll_window(st, t1)
+            before = 0.0
             st.used = rate * (t1 - st.window_start)
         st.total_used += amount
+        self._note_overrun(st, before)
 
     def next_trip_time(self, core: int, rate: float, now: float) -> float:
         """Absolute time at which continuous traffic at ``rate`` exceeds the
@@ -262,7 +304,7 @@ class BandwidthRegulator:
         st = self.cores[core]
         self._roll_window(st, now)
         st.throttle_events += 1
-        st.stalled_until = st.window_start + st.interval
+        self._set_stall(core, st)
 
     # ---- dynamic reclaiming (DESIGN.md §7.5) -------------------------
     # Pure accounting: eligibility (which cores may donate, which

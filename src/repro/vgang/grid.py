@@ -51,6 +51,7 @@ import json
 import multiprocessing
 import os
 import random
+import sys
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -190,6 +191,79 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
     }
 
 
+def _skipped_row(cell: Tuple) -> Dict:
+    """Placeholder row for a cell that failed/timed out twice: keeps the
+    curve files structurally complete; consumers (print_curves, the
+    plotting example) filter on the ``skipped`` flag."""
+    _, n_cores, dist, util = cell[:4]
+    return {"n_cores": n_cores, "dist": dist, "util": util, "n": 0,
+            "accept": None, "sim_accept": None, "sim_n": 0,
+            "soundness_violations": 0, "mean_util_gain": None,
+            "wall_s": None, "skipped": True}
+
+
+def _dispatch(cells: Sequence[Tuple], procs: int,
+              cell_timeout: Optional[float],
+              worker=_grid_cell) -> Tuple[List[Dict], List[Tuple]]:
+    """Run the cell workers with per-cell hardening: a cell that exceeds
+    ``cell_timeout`` seconds (or raises) is retried once in a fresh
+    pool; a second failure skips the cell (placeholder row + log line)
+    instead of hanging or killing the whole grid. ``worker`` is
+    injectable for tests. With ``procs <= 1`` (in-process) a timeout
+    cannot be enforced preemptively, so only the raise-retry applies."""
+    out: Dict[int, Dict] = {}
+    todo = list(range(len(cells)))
+    for attempt in (0, 1):
+        if not todo:
+            break
+        failed: List[int] = []
+        if procs > 1:
+            # fresh pool per round: terminating it reaps workers stuck
+            # on timed-out cells, so retries start clean
+            pool = multiprocessing.Pool(min(procs, len(todo)))
+            try:
+                asyncs = [(i, pool.apply_async(worker, (cells[i],)))
+                          for i in todo]
+                for i, a in asyncs:
+                    try:
+                        out[i] = a.get(cell_timeout)
+                    except Exception as e:
+                        print(f"grid: cell {cells[i][1]}c/"
+                              f"{cells[i][2]}/u={cells[i][3]} "
+                              f"{'timed out' if isinstance(e, multiprocessing.TimeoutError) else f'failed ({e!r})'}"
+                              f" (attempt {attempt + 1})",
+                              file=sys.stderr)
+                        failed.append(i)
+                # a cell may have finished while we waited on a later
+                # one: harvest before declaring it failed
+                for i, a in asyncs:
+                    if i in failed and a.ready():
+                        try:
+                            out[i] = a.get(0)
+                            failed.remove(i)
+                        except Exception:
+                            pass
+            finally:
+                pool.terminate()
+                pool.join()
+        else:
+            for i in todo:
+                try:
+                    out[i] = worker(cells[i])
+                except Exception as e:
+                    print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/"
+                          f"u={cells[i][3]} failed ({e!r}) "
+                          f"(attempt {attempt + 1})", file=sys.stderr)
+                    failed.append(i)
+        todo = failed
+    skipped = [cells[i] for i in todo]
+    for i in todo:
+        out[i] = _skipped_row(cells[i])
+        print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/u={cells[i][3]} "
+              f"skipped after retry", file=sys.stderr)
+    return [out[i] for i in range(len(cells))], skipped
+
+
 def run_grid(cores: Sequence[int] = (4, 8, 16),
              dists: Sequence[str] = ("light", "mixed", "heavy"),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
@@ -199,7 +273,9 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              n_per_cell: int = 50, sim_check: int = 2, gamma: float = 0.5,
              cycles: float = 20.0, seed: int = 0,
              processes: Optional[int] = None,
-             out_dir: str = OUT_DEFAULT) -> Dict:
+             out_dir: str = OUT_DEFAULT,
+             cell_timeout: Optional[float] = None,
+             worker=_grid_cell) -> Dict:
     """Run the full grid; one batched worker per (cores, dist, util)
     cell; aggregate and write per-(cores, dist) curve files + summary."""
     # the singleton baseline is always evaluated under its curve label
@@ -222,11 +298,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
     procs = max(1, min(procs, len(cells)))
     t0 = time.time()
-    if procs > 1:
-        with multiprocessing.Pool(procs) as pool:
-            results = pool.map(_grid_cell, cells, chunksize=1)
-    else:
-        results = [_grid_cell(c) for c in cells]
+    results, skipped = _dispatch(cells, procs, cell_timeout, worker)
 
     summary = {"seed": seed, "gamma": gamma, "cycles": cycles,
                "n_per_cell": n_per_cell, "sim_check": sim_check,
@@ -236,6 +308,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                "utils": list(utils),
                "soundness_violations": sum(r["soundness_violations"]
                                            for r in results),
+               "skipped_cells": len(skipped),
                "wall_s": round(time.time() - t0, 3),
                "files": []}
     os.makedirs(out_dir, exist_ok=True)
@@ -258,8 +331,11 @@ def print_curves(results: List[Dict]) -> None:
     keys = sorted({(r["n_cores"], r["dist"]) for r in results})
     for m, d in keys:
         rows = sorted((r for r in results
-                       if r["n_cores"] == m and r["dist"] == d),
+                       if r["n_cores"] == m and r["dist"] == d
+                       and not r.get("skipped")),
                       key=lambda r: r["util"])
+        if not rows:
+            continue
         heuristics = list(rows[0]["accept"])
         print(f"\n{m} cores, {d} widths (acceptance ratio per util):")
         header = "  util  " + "".join(f"{h:>10}" for h in heuristics)
@@ -285,6 +361,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--cycles", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--procs", type=int, default=0)
+    ap.add_argument("--cell-timeout", type=float, default=0.0,
+                    help="per-cell wall-clock timeout in seconds (one "
+                         "retry, then the cell is skipped); 0 = none")
     ap.add_argument("--out", default=OUT_DEFAULT)
     args = ap.parse_args(argv)
 
@@ -301,12 +380,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         heuristics=tuple(args.heuristics.split(",")),
         n_per_cell=args.n, sim_check=args.sim_check, gamma=args.gamma,
         cycles=args.cycles, seed=args.seed,
-        processes=args.procs or None, out_dir=args.out)
+        processes=args.procs or None, out_dir=args.out,
+        cell_timeout=args.cell_timeout or None)
     print_curves(out["results"])
     s = out["summary"]
     print(f"\nwrote {len(s['files'])} curve files + summary to "
           f"{args.out} in {s['wall_s']}s "
-          f"(soundness violations: {s['soundness_violations']})")
+          f"(soundness violations: {s['soundness_violations']}, "
+          f"skipped cells: {s['skipped_cells']})")
     return 1 if s["soundness_violations"] else 0
 
 

@@ -17,6 +17,7 @@ float equality.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gang import RTTask
@@ -86,6 +87,47 @@ def accepts(vgangs: Sequence[VirtualGang],
     res = schedulable_vgangs(vgangs, interference, blocking=blocking,
                              crpd=crpd)
     return all(v["ok"] for v in res.values())
+
+
+def schedulable_vgangs_enforced(
+        vgangs: Sequence[VirtualGang],
+        interference: PairwiseInterference = no_interference,
+        enforcement=None,
+        blocking: float = 0.0, crpd: float = 0.0) -> Dict[str, Dict]:
+    """Admission with runtime overrun enforcement priced in
+    (core/faults.py, DESIGN.md §11) — the enforcement-aware restoration
+    of the paper's interference/blocking bound.
+
+    Without enforcement the RTA is vacuous against misbehavior: a job
+    that overruns its declared WCET occupies the machine for as long as
+    it pleases (one-gang-at-a-time makes that occupancy everyone else's
+    interference), so no bound computed from declarations survives a
+    single lying task. With an ``Enforcement`` policy, *no* job —
+    compliant or not — can occupy the machine for more than:
+
+    * ``factor x C_v`` of executed work (the work budget cuts it
+      there), and,
+    * when the watchdog is armed, ``watchdog_factor x P_v`` of wall
+      time since release (the watchdog aborts it there even if it
+      executes nothing at all — e.g. a thread stalled forever by a
+      lost wakeup, which no work budget can catch).
+
+    Each virtual gang's equivalent-task WCET is therefore replaced by
+    the tighter of the two occupancy bounds and the standard fixed
+    point runs unchanged: the resulting per-gang response times hold
+    for every *compliant* gang no matter how any other task misbehaves.
+    With ``enforcement=None`` (or factor 1.0, no watchdog) this is
+    exactly ``schedulable_vgangs`` — the declared-WCET bound, sound
+    only when every task is honest."""
+    factor = 1.0 if enforcement is None else enforcement.factor
+    wd = None if enforcement is None else enforcement.watchdog_factor
+    eq = []
+    for t in vgang_taskset(vgangs, interference):
+        w = t.wcet * factor
+        if wd is not None:
+            w = min(w, wd * t.period)
+        eq.append(dataclasses.replace(t, wcet=w) if w != t.wcet else t)
+    return core_rta.schedulable(eq, blocking=blocking, crpd=crpd)
 
 
 # ---------------------------------------------------------------------

@@ -176,6 +176,29 @@ class VirtualGangPolicy:
                         **kwargs) -> Simulator:
         """Simulator over the flattened members with this policy wired in
         (dt=None: exact event engine)."""
+        interval = kwargs.get("regulation_interval", 1.0)
+        if self.rtg_throttle and interval > 0.0:
+            # declaration sanity on the *intensity* scale (every sibling
+            # traffic_rate <= 1, so a core generates at most ``interval``
+            # units per window): a sibling cap above that can never trip
+            # — almost certainly a bytes-scale budget (executor units)
+            # fed to a simulator. The executor's byte-scale caps are
+            # deliberately exempt: there the comparison is meaningless.
+            for vg in self.vgangs:
+                sibs = [m for m in vg.members
+                        if m.uid != self._critical[vg.prio]]
+                if not sibs or any(m.traffic_rate > 1.0 for m in sibs):
+                    continue
+                cap = rtg_sibling_budget(vg, self.interference, interval)
+                if cap > interval + 1e-12:
+                    raise ValueError(
+                        f"virtual gang {vg.name!r}: RTG-throttle sibling "
+                        f"budget {cap} exceeds the regulation interval "
+                        f"{interval} — on the intensity scale "
+                        f"(traffic_rate <= 1) a core cannot generate "
+                        f"that much traffic per window, so the cap can "
+                        f"never take effect; declare the critical "
+                        f"member's mem_budget in simulator units")
         return Simulator(self.n_cores, self.taskset(), be_tasks=be_tasks,
                          interference=interference or self.interference,
                          rt_gang_enabled=True, dt=dt,

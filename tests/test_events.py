@@ -200,3 +200,58 @@ def test_exact_backlogged_jobs_fifo():
         e.response_times["over"], abs=DT_DEFAULT)
     assert q.deadline_misses == e.deadline_misses
     assert e.deadline_misses["over"] > 0
+
+
+# ---------------------------------------------------------------------
+# deadline-miss parity: counts AND per-task miss timestamps agree
+# between engines (ISSUE 6 satellite; miss_times is stamped at the
+# completion/abort instant, same rule in both engines)
+# ---------------------------------------------------------------------
+
+def _miss_parity(q, e, tol):
+    assert q.deadline_misses == e.deadline_misses
+    assert set(q.miss_times) == set(e.miss_times)
+    for name in q.miss_times:
+        assert len(q.miss_times[name]) == len(e.miss_times[name]), name
+        for tq, te in zip(q.miss_times[name], e.miss_times[name]):
+            assert abs(tq - te) <= tol, name
+
+
+def test_miss_parity_fig4():
+    rts, bes = fig4_taskset()
+    q = Simulator(4, rts, be_tasks=bes, rt_gang_enabled=True,
+                  dt=0.025).run(100.0)
+    e = Simulator(4, rts, be_tasks=bes, rt_gang_enabled=True,
+                  dt=None).run(100.0)
+    _miss_parity(q, e, DT_DEFAULT)
+    assert sum(q.deadline_misses.values()) == 0     # Fig.4b: schedulable
+
+
+def test_miss_parity_fig5():
+    rts, bes, intf = fig5_taskset()
+    q = Simulator(4, rts, be_tasks=bes, interference=intf,
+                  rt_gang_enabled=True, dt=0.025,
+                  throttle_mode="reactive").run(120.0)
+    e = Simulator(4, rts, be_tasks=bes, interference=intf,
+                  rt_gang_enabled=True, dt=None,
+                  throttle_mode="reactive").run(120.0)
+    _miss_parity(q, e, DT_DEFAULT)
+
+
+def test_miss_parity_overloaded():
+    """A genuinely overloaded variant, so the parity check exercises
+    non-empty miss lists: every miss lands at the same (task, ordinal)
+    with timestamps within one default quantum."""
+    rts, bes = fig4_taskset()
+    import dataclasses
+    rts = [dataclasses.replace(rts[0], wcet=5.0, n_jobs=8),
+           dataclasses.replace(rts[1], wcet=7.0, n_jobs=8)]
+    q = Simulator(4, rts, be_tasks=bes, rt_gang_enabled=True,
+                  dt=0.025).run(140.0)
+    e = Simulator(4, rts, be_tasks=bes, rt_gang_enabled=True,
+                  dt=None).run(140.0)
+    assert sum(e.deadline_misses.values()) > 0
+    _miss_parity(q, e, DT_DEFAULT)
+    # every recorded miss count matches its timestamp list's length
+    for name, n in e.deadline_misses.items():
+        assert len(e.miss_times.get(name, [])) == n

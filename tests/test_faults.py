@@ -1,0 +1,391 @@
+"""Fault injection + overrun enforcement (core/faults.py, DESIGN.md §11).
+
+Covers the robustness tentpole end to end:
+
+* seeded fault plans resolve identically across engines and runs;
+* containment: with enforcement on, non-faulty gangs' deadline misses
+  equal the fault-free baseline (abort/demote), and a hung thread is
+  bounded by the watchdog instead of wedging the machine forever;
+* engine parity: quantum and event engines agree on misses and on
+  every fault/enforcement counter under the same plan;
+* property-style invariants over seeded plans: the regulator never
+  exceeds its per-window limit, the gang lock is never leaked by an
+  aborted gang, and every non-faulty gang's observed response stays
+  under the enforcement-aware RTA bound;
+* executor: a wall-clock watchdog aborts a hung member instead of
+  deadlocking the gang barrier;
+* declaration validation and grid-cell hardening.
+"""
+import time
+
+import pytest
+
+from repro.core.faults import (BeOverrun, Enforcement, FaultPlan,
+                               HungThread, LostWakeup, WcetOverrun)
+from repro.core.gang import BETask, RTTask, validate_declared
+from repro.core.sim import Simulator
+from repro.vgang.formation import VirtualGang, singleton_vgangs
+from repro.vgang.grid import _dispatch, _skipped_row
+from repro.vgang.rta import schedulable_vgangs_enforced
+from repro.vgang.sched import VirtualGangPolicy
+
+HORIZON = 200.0
+DT = 0.05
+
+
+def taskset():
+    """Three gangs on 4 cores, ~60% utilization, distinct criticality.
+    tau2 is the designated misbehaver in most scenarios; tau3 spans all
+    cores so any leaked lock or unbounded overrun shows up in its
+    misses immediately."""
+    return [
+        RTTask("tau1", wcet=2.0, period=10.0, cores=(0, 1), prio=5,
+               mem_budget=100.0, criticality=2),
+        RTTask("tau2", wcet=3.0, period=15.0, cores=(2, 3), prio=4,
+               mem_budget=100.0, criticality=1),
+        RTTask("tau3", wcet=4.0, period=20.0, cores=(0, 1, 2, 3), prio=3,
+               mem_budget=100.0, criticality=0),
+    ]
+
+
+def run(dt, fault_plan=None, enforcement=None, tasks=None, be=(),
+        horizon=HORIZON, **kw):
+    sim = Simulator(4, tasks if tasks is not None else taskset(),
+                    be_tasks=be, dt=dt, fault_plan=fault_plan,
+                    enforcement=enforcement, **kw)
+    return sim, sim.run(horizon)
+
+
+OVERRUN = FaultPlan(faults=(WcetOverrun("tau2", factor=4.0),))
+NONFAULTY = ("tau1", "tau3")
+
+
+# ---------------------------------------------------------------------
+# plan / declaration validation
+# ---------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(faults=("not a fault",))
+    with pytest.raises(ValueError):
+        FaultPlan(faults=(WcetOverrun("t", factor=0.0),))
+    with pytest.raises(ValueError):
+        FaultPlan(faults=(WcetOverrun("t", prob=1.5),))
+    with pytest.raises(ValueError):
+        FaultPlan(faults=(HungThread("t", job=-1),))
+    with pytest.raises(ValueError):
+        FaultPlan(faults=(BeOverrun("b", factor=-2.0),))
+
+
+def test_enforcement_validation():
+    with pytest.raises(ValueError):
+        Enforcement(action="panic")
+    with pytest.raises(ValueError):
+        Enforcement(factor=0.0)
+    with pytest.raises(ValueError):
+        Enforcement(watchdog_factor=0.0)
+    Enforcement(action="degrade", factor=1.5, watchdog_factor=3.0)
+
+
+def test_task_parameter_validation():
+    with pytest.raises(ValueError):
+        RTTask("bad", wcet=0.0, period=10.0, cores=(0,), prio=1)
+    with pytest.raises(ValueError):
+        RTTask("bad", wcet=1.0, period=0.0, cores=(0,), prio=1)
+    with pytest.raises(ValueError):
+        RTTask("bad", wcet=1.0, period=10.0, cores=(0,), prio=1,
+               mem_intensity=1.5)
+    with pytest.raises(ValueError):
+        BETask("bad", cores=(0,), mem_rate=-1.0)
+    # WCET > period is a *declaration* error, rejected only where
+    # declarations must be trusted (RTA builds such tasks on purpose)
+    fat = RTTask("fat", wcet=12.0, period=10.0, cores=(0,), prio=1)
+    with pytest.raises(ValueError):
+        validate_declared([fat])
+    with pytest.raises(ValueError):
+        Simulator(1, [fat], enforcement=Enforcement())
+    Simulator(1, [fat])  # un-enforced simulation is allowed to model it
+
+
+def test_simulator_parameter_validation():
+    with pytest.raises(ValueError):
+        Simulator(4, taskset(), regulation_interval=0.0)
+    with pytest.raises(ValueError):
+        Simulator(4, taskset(), dt=0.0)
+
+
+def test_sibling_budget_exceeds_interval_rejected():
+    # critical member declares a per-window tolerance far above what an
+    # intensity-scale sibling can even generate in one window: the cap
+    # could never trip, so build_simulator flags the declaration
+    members = [
+        RTTask("crit", wcet=5.0, period=20.0, cores=(0, 1), prio=2,
+               mem_budget=50.0, mem_intensity=0.9),
+        RTTask("sib", wcet=1.0, period=20.0, cores=(2,), prio=2,
+               mem_intensity=0.5),
+    ]
+    pol = VirtualGangPolicy([VirtualGang("vg", members, prio=1)], 4,
+                            auto_prio=False, rtg_throttle=True)
+    with pytest.raises(ValueError):
+        pol.build_simulator()
+
+
+# ---------------------------------------------------------------------
+# seeded plans are deterministic
+# ---------------------------------------------------------------------
+
+def test_seeded_plan_is_deterministic():
+    mk = lambda: FaultPlan(
+        faults=(WcetOverrun("tau2", factor=3.0, prob=0.5),), seed=7)
+    a, b = mk(), mk()
+    hits_a = [a.overrun_factor("tau2", i) for i in range(64)]
+    hits_b = [b.overrun_factor("tau2", i) for i in range(64)]
+    assert hits_a == hits_b
+    n_hit = sum(1 for f in hits_a if f > 1.0)
+    assert 0 < n_hit < 64          # prob=0.5 actually samples
+    other = FaultPlan(
+        faults=(WcetOverrun("tau2", factor=3.0, prob=0.5),), seed=8)
+    assert hits_a != [other.overrun_factor("tau2", i) for i in range(64)]
+
+
+# ---------------------------------------------------------------------
+# containment
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("dt", [DT, None], ids=["quantum", "event"])
+def test_abort_containment(dt):
+    _, base = run(dt)
+    _, loose = run(dt, fault_plan=OVERRUN)
+    _, hard = run(dt, fault_plan=OVERRUN,
+                  enforcement=Enforcement("abort", factor=1.2,
+                                          watchdog_factor=2.0))
+    # un-enforced, the 4x overrun starves tau3 outright (misses are
+    # stamped at completion, so a job that never finishes shows up as a
+    # lost completion, not a recorded miss)
+    assert len(loose.response_times["tau3"]) < \
+        len(base.response_times["tau3"])
+    # enforced: every non-faulty gang sees exactly its fault-free
+    # misses AND completes exactly its fault-free job count
+    for n in NONFAULTY:
+        assert hard.deadline_misses[n] == base.deadline_misses[n]
+        assert len(hard.response_times[n]) == len(base.response_times[n])
+    assert hard.faults["enforced"]["abort"] > 0
+    assert hard.faults["lock_leaks"] == 0
+    assert all(name == "tau2" for name, _, _ in
+               hard.faults["aborted_jobs"])
+    # every aborted job is charged as a miss on the misbehaver
+    assert hard.deadline_misses["tau2"] >= len(hard.faults["aborted_jobs"])
+
+
+@pytest.mark.parametrize("dt", [DT, None], ids=["quantum", "event"])
+def test_demote_containment(dt):
+    _, base = run(dt)
+    _, res = run(dt, fault_plan=OVERRUN,
+                 enforcement=Enforcement("demote", factor=1.2))
+    for n in NONFAULTY:
+        assert res.deadline_misses[n] == base.deadline_misses[n]
+        assert len(res.response_times[n]) == len(base.response_times[n])
+    assert res.faults["enforced"]["demote"] > 0
+    assert res.faults["lock_leaks"] == 0
+
+
+@pytest.mark.parametrize("dt", [DT, None], ids=["quantum", "event"])
+def test_degrade_suspends_lower_criticality(dt):
+    # one faulty job only, so the degraded interval ends and the
+    # suspended gang gets restored for the rest of the horizon
+    plan = FaultPlan(faults=(WcetOverrun("tau2", factor=4.0, jobs=(1,)),))
+    _, res = run(dt, fault_plan=plan,
+                 enforcement=Enforcement("degrade", factor=1.2,
+                                         watchdog_factor=2.0))
+    assert res.faults["enforced"]["degrade"] > 0
+    assert res.faults["lock_leaks"] == 0
+    # tau1 (higher criticality than the overrunner) is never suspended
+    assert res.deadline_misses["tau1"] == 0
+    # tau3 (lower criticality) is suspended but restored afterwards:
+    # it still completes jobs over the horizon
+    assert len(res.response_times["tau3"]) > 0
+
+
+@pytest.mark.parametrize("dt", [DT, None], ids=["quantum", "event"])
+def test_hung_thread_bounded_by_watchdog(dt):
+    plan = FaultPlan(faults=(HungThread("tau2", job=1, thread=0),))
+    _, loose = run(dt, fault_plan=plan)
+    # enforcement with a huge work budget: only the wall-clock watchdog
+    # can catch the hang
+    _, hard = run(dt, fault_plan=plan,
+                  enforcement=Enforcement("abort", factor=100.0,
+                                          watchdog_factor=2.0))
+    assert hard.faults["watchdog_fires"] >= 1
+    assert ("tau2", 1) in {(n, i) for n, i, _ in
+                           hard.faults["aborted_jobs"]}
+    assert hard.faults["lock_leaks"] == 0
+    # un-enforced, the hung gang wedges the lock forever: every lower-
+    # priority job from the hang onwards never completes (and a job
+    # that never finishes records no miss — it vanishes). The watchdog
+    # bounds the outage to 2 periods, after which tau3 resumes.
+    assert len(hard.response_times["tau3"]) > \
+        len(loose.response_times["tau3"])
+
+
+@pytest.mark.parametrize("dt", [DT, None], ids=["quantum", "event"])
+def test_lost_wakeup_extends_stall(dt):
+    tasks = [RTTask("rt", wcet=6.0, period=10.0, cores=(0, 1), prio=2,
+                    mem_budget=0.3)]
+    be = [BETask("be", cores=(2, 3), mem_rate=1.0)]
+    _, base = run(dt, tasks=tasks, be=be)
+    plan = FaultPlan(faults=(LostWakeup(core=2, nth=1, extra=25.0),))
+    _, res = run(dt, tasks=tasks, be=be, fault_plan=plan)
+    assert res.faults["injected_lost_wakeups"] == 1
+    # the lost wakeup keeps core 2 stalled past its window end until
+    # the gang's budget lift: strictly less best-effort progress
+    assert res.be_progress["be"] < base.be_progress["be"] - 1.0
+    # RT side is unaffected — the stall is on a best-effort core
+    assert res.deadline_misses["rt"] == base.deadline_misses["rt"]
+
+
+# ---------------------------------------------------------------------
+# engine parity under fault plans
+# ---------------------------------------------------------------------
+
+SCENARIOS = {
+    "overrun-loose": (OVERRUN, None),
+    "overrun-abort": (OVERRUN, Enforcement("abort", factor=1.2,
+                                           watchdog_factor=2.0)),
+    "overrun-demote": (OVERRUN, Enforcement("demote", factor=1.2)),
+    "overrun-degrade": (OVERRUN, Enforcement("degrade", factor=1.2,
+                                             watchdog_factor=2.0)),
+    "hung-watchdog": (FaultPlan(faults=(HungThread("tau2", job=1),)),
+                      Enforcement("abort", factor=100.0,
+                                  watchdog_factor=2.0)),
+    "seeded-prob": (FaultPlan(
+        faults=(WcetOverrun("tau2", factor=3.0, prob=0.5),), seed=3),
+        Enforcement("abort", factor=1.2, watchdog_factor=2.0)),
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS), ids=str)
+def test_engine_parity_under_faults(scenario):
+    plan, enf = SCENARIOS[scenario]
+    _, q = run(DT, fault_plan=plan, enforcement=enf)
+    _, e = run(None, fault_plan=plan, enforcement=enf)
+    assert q.deadline_misses == e.deadline_misses
+    for name in q.miss_times:
+        assert len(q.miss_times[name]) == len(e.miss_times[name])
+        for tq, te in zip(q.miss_times[name], e.miss_times[name]):
+            assert abs(tq - te) <= DT + 1e-9
+    for key in ("injected_overruns", "injected_hangs", "enforced",
+                "watchdog_fires", "lock_leaks"):
+        assert q.faults[key] == e.faults[key], key
+    # aborts land at the same (task, job), within one quantum in time
+    aq = sorted((n, i) for n, i, _ in q.faults["aborted_jobs"])
+    ae = sorted((n, i) for n, i, _ in e.faults["aborted_jobs"])
+    assert aq == ae
+
+
+# ---------------------------------------------------------------------
+# property-style invariants over seeded plans
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_invariants(seed):
+    enf = Enforcement("abort", factor=1.2, watchdog_factor=2.0)
+    plan = FaultPlan(
+        faults=(WcetOverrun("tau2", factor=3.0, prob=0.6),), seed=seed)
+    bound = schedulable_vgangs_enforced(
+        singleton_vgangs(taskset()), enforcement=enf)
+    for dt in (DT, None):
+        sim, res = run(dt, fault_plan=plan, enforcement=enf)
+        # regulator never spends more than its per-window limit (the
+        # quantum engine can overshoot by at most one quantum of traffic)
+        slack = 1e-9 if dt is None else 2.0 * dt
+        assert sim.reg.max_overrun() <= slack
+        # the gang lock is never left held by an aborted gang
+        assert res.faults["lock_leaks"] == 0
+        # every non-faulty gang's observed response respects the
+        # enforcement-aware RTA bound — no matter what tau2 did
+        for name in NONFAULTY:
+            assert bound[name]["ok"]
+            assert res.wcrt(name) <= bound[name]["wcrt"] + 1e-6
+
+
+def test_result_has_no_fault_summary_when_unarmed():
+    _, res = run(None)
+    assert res.faults is None
+
+
+# ---------------------------------------------------------------------
+# executor watchdog
+# ---------------------------------------------------------------------
+
+def test_executor_watchdog_aborts_hung_member():
+    from repro.core.executor import GangExecutor, RTJob
+
+    def hang(lane, idx):
+        if idx == 1 and lane == 0:
+            time.sleep(1.2)          # runaway member
+
+    def quick(lane, idx):
+        time.sleep(0.002)
+
+    ex = GangExecutor(2, watchdog_factor=2.0)
+    ex.submit_rt(RTJob("hog", hang, lanes=(0, 1), prio=2, period_s=0.06,
+                       wcet_s=0.01, n_jobs=3))
+    ex.submit_rt(RTJob("ok", quick, lanes=(0, 1), prio=1, period_s=0.1,
+                       wcet_s=0.01))
+    t0 = time.monotonic()
+    res = ex.run(0.5)
+    # the hung member was aborted by the lane watchdog: the barrier did
+    # not deadlock and the run returned without waiting out the sleep
+    assert res["aborted"].get("hog", 0) >= 1
+    assert any(name == "hog" and idx == 1
+               for name, _lane, idx, _t in res["watchdog_aborts"])
+    # the lower-priority gang still ran after the abort
+    assert len(res["response_times"].get("ok", [])) >= 1
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------
+# grid hardening
+# ---------------------------------------------------------------------
+
+_CELL = (0, 4, "uniform", 0.5, 1, ("intfaware",), False, False, 0, 2.0,
+         None)
+
+
+def _ok_worker(cell):
+    return {"n_cores": cell[1], "dist": cell[2], "util": cell[3],
+            "n": 1, "accept": {}, "sim_accept": {}, "sim_n": 0,
+            "soundness_violations": 0, "mean_util_gain": 0.0,
+            "wall_s": 0.0}
+
+
+def _boom_worker(cell):
+    raise RuntimeError("boom")
+
+
+def _slow_worker(cell):
+    time.sleep(30.0)
+    return _ok_worker(cell)
+
+
+def test_grid_dispatch_ok():
+    rows, skipped = _dispatch([_CELL, _CELL], procs=2, cell_timeout=60.0,
+                              worker=_ok_worker)
+    assert skipped == []
+    assert all(not r.get("skipped") for r in rows)
+
+
+def test_grid_dispatch_skips_failing_cell():
+    rows, skipped = _dispatch([_CELL, _CELL], procs=2, cell_timeout=60.0,
+                              worker=_boom_worker)
+    assert len(skipped) == 2
+    assert all(r["skipped"] for r in rows)
+    assert rows[0] == _skipped_row(_CELL)
+
+
+def test_grid_dispatch_times_out_slow_cell():
+    t0 = time.monotonic()
+    rows, skipped = _dispatch([_CELL], procs=2, cell_timeout=0.5,
+                              worker=_slow_worker)
+    assert len(skipped) == 1 and rows[0]["skipped"]
+    assert time.monotonic() - t0 < 20.0
