@@ -66,6 +66,12 @@ from repro.vgang.formation import (VirtualGang, assign_priorities,
 from repro.vgang.rta import schedulable_rtg_throttle, schedulable_vgangs
 from repro.vgang.sched import VirtualGangPolicy
 from repro.core.executor import BEJob
+from repro.obs.metrics import MetricsRegistry
+
+try:
+    from benchmarks.run import write_bench_json
+except ImportError:    # run as `python benchmarks/bench_executor_vgang.py`
+    from run import write_bench_json
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -197,7 +203,8 @@ def run_mode(mode, vgangs, steps, intf, duration_s, be_bytes=BE_BYTES):
            for name, step in steps.items()}
     bpq = dict(SIBLING_BYTES) if mode.startswith("rtgT") else None
     ex = policy.build_executor(fns, regulation_interval_s=INTERVAL_S,
-                               bytes_per_quantum=bpq)
+                               bytes_per_quantum=bpq,
+                               metrics=MetricsRegistry())
     assert all(max(m.cores) < ctx["free_lane"]
                for m in policy.taskset()), "free lane must stay BE-only"
     ex.submit_be(BEJob("be_fill", lambda lane: time.sleep(3e-4),
@@ -301,6 +308,13 @@ def main():
                 "max_response_ms": None if max_s is None
                 else max_s * 1e3,
                 "rta_bound_ms": bound_ms, "rta_ok": bnd[name]["ok"],
+                # measured-margin accounting (DESIGN.md §12.3): slack
+                # of the worst observed job against the analytic bound
+                "worst_margin_ms": (None if bound_ms is None
+                                    or max_s is None
+                                    else bound_ms - max_s * 1e3),
+                "negative": (0 if bound_ms is None else sum(
+                    1 for r in rts if r * 1e3 > bound_ms + 1e-9)),
             }
             if not bnd[name]["ok"] or bound_ms is None:
                 failures.append(f"{mode}:{name} RTA verdict not ok")
@@ -319,9 +333,18 @@ def main():
             failures.append(
                 f"{mode}: {ctx['budget_violations']} budget-ordering "
                 f"violations")
+        worsts = [e["worst_margin_ms"] for e in members.values()
+                  if e["worst_margin_ms"] is not None]
         report["modes"][mode] = {
             "vgangs": [vg.name for vg in policy.vgangs],
             "members": members,
+            "rta_margin": {
+                "jobs": sum(e["jobs"] for e in members.values()),
+                "worst_margin_ms": min(worsts) if worsts else None,
+                "negative": sum(e["negative"]
+                                for e in members.values()),
+            },
+            "metrics": stats.get("metrics"),
             "invariant_violations": ctx["invariant_violations"],
             "budget_violations": ctx["budget_violations"],
             "rt_stalls": stats["rt_stalls"],
@@ -342,8 +365,15 @@ def main():
                   f"bound={e['rta_bound_ms'] and round(e['rta_bound_ms'], 2)} ms")
 
     report["ok"] = not failures
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
+    mode_margins = [m["rta_margin"] for m in report["modes"].values()]
+    worsts = [m["worst_margin_ms"] for m in mode_margins
+              if m["worst_margin_ms"] is not None]
+    report["rta_margin"] = {
+        "jobs": sum(m["jobs"] for m in mode_margins),
+        "worst_margin_ms": min(worsts) if worsts else None,
+        "negative": sum(m["negative"] for m in mode_margins),
+    }
+    write_bench_json(args.out, report)
     print(f"wrote {args.out}")
     if failures:
         print("FAILURES:")

@@ -32,11 +32,20 @@ import os
 import sys
 import time
 
+from repro.core import rta as core_rta
 from repro.core.executor import GangExecutor, RTJob
 from repro.core.faults import (Enforcement, FaultPlan, HungThread,
                                WcetOverrun)
 from repro.core.gang import BETask, RTTask
 from repro.core.sim import Simulator
+from repro.obs.margins import merge_margins, overall
+from repro.vgang.formation import singleton_vgangs
+from repro.vgang.rta import schedulable_vgangs_enforced
+
+try:
+    from benchmarks.run import write_bench_json
+except ImportError:          # run as `python benchmarks/bench_faults.py`
+    from run import write_bench_json
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -69,17 +78,19 @@ PLAN = FaultPlan(faults=(
 ENF = Enforcement(action="abort", factor=1.2, watchdog_factor=2.0)
 
 
-def simulate(dt, horizon, fault_plan=None, enforcement=None):
+def simulate(dt, horizon, fault_plan=None, enforcement=None,
+             rta_bounds=None):
     rts, bes = taskset()
     sim = Simulator(8, rts, be_tasks=bes, dt=dt,
-                    fault_plan=fault_plan, enforcement=enforcement)
+                    fault_plan=fault_plan, enforcement=enforcement,
+                    rta_bounds=rta_bounds)
     t0 = time.time()
     res = sim.run(horizon)
     return res, time.time() - t0
 
 
 def summarize(res, wall):
-    return {
+    out = {
         "misses": dict(res.deadline_misses),
         "completions": {n: len(rs) for n, rs in
                         res.response_times.items()},
@@ -88,16 +99,52 @@ def summarize(res, wall):
         "faults": res.faults,
         "wall_s": round(wall, 4),
     }
+    if res.rta_margins is not None:
+        out["rta_margins"] = res.rta_margins
+    return out
+
+
+def margin_bounds():
+    """Analytic bounds for the margin-instrumented runs: the fault-free
+    baseline is priced by plain gang RTA over the declared WCETs; the
+    enforced run by the enforcement-aware RTA
+    (``schedulable_vgangs_enforced`` over the singleton set), whose
+    equivalent WCET prices ``factor x C`` occupancy — sound even while
+    the faulty gang misbehaves, which is the point of enforcement. The
+    un-enforced faulty run has no sound bound (a 4x overrun with no
+    backstop prices nothing), so it carries no margins."""
+    rts, _ = taskset()
+    base = {n: v["wcrt"] for n, v in core_rta.schedulable(rts).items()}
+    enf = {n: v["wcrt"] for n, v in schedulable_vgangs_enforced(
+        singleton_vgangs(rts), enforcement=ENF).items()}
+    assert all(b is not None for b in base.values())
+    assert all(b is not None for b in enf.values())
+    return base, enf
 
 
 def run_engines(horizon):
     out = {}
     violations = []
+    margins = {}
+    base_bounds, enf_bounds = margin_bounds()
     for engine, dt in (("quantum", 0.05), ("event", None)):
-        base, wb = simulate(dt, horizon)
+        # quantum completions are stamped up to one dt late: add the
+        # discretization slop to the bounds (obs/margins.py)
+        slop = dt or 0.0
+        bb = {n: b + slop for n, b in base_bounds.items()}
+        eb = {n: b + slop for n, b in enf_bounds.items()}
+        base, wb = simulate(dt, horizon, rta_bounds=bb)
         loose, wl = simulate(dt, horizon, fault_plan=PLAN)
         hard, wh = simulate(dt, horizon, fault_plan=PLAN,
-                            enforcement=ENF)
+                            enforcement=ENF, rta_bounds=eb)
+        merge_margins(margins, base.rta_margins)
+        merge_margins(margins, hard.rta_margins)
+        for phase, res in (("baseline", base), ("enforced", hard)):
+            neg = sum(r["negative"] for r in res.rta_margins.values())
+            if neg:
+                violations.append(
+                    f"{engine}/{phase}: {neg} responses beyond the "
+                    f"RTA bound (negative margin)")
         out[engine] = {"baseline": summarize(base, wb),
                        "unenforced": summarize(loose, wl),
                        "enforced": summarize(hard, wh)}
@@ -127,7 +174,7 @@ def run_engines(horizon):
                 f"{engine}: un-enforced faults cost no completions "
                 f"— workload too lax to demonstrate containment")
         out[engine]["victim_completions_lost_unenforced"] = lost
-    return out, violations
+    return out, violations, overall(margins)
 
 
 def run_executor(duration):
@@ -177,7 +224,7 @@ def main():
     args = ap.parse_args()
 
     horizon = 400.0 if args.smoke else 2000.0
-    engines, violations = run_engines(horizon)
+    engines, violations, rta_margin = run_engines(horizon)
     exec_out, exec_violations = run_executor(0.4 if args.smoke else 1.0)
     violations += exec_violations
 
@@ -189,12 +236,11 @@ def main():
                         "watchdog_factor": ENF.watchdog_factor},
         "engines": engines,
         "executor": exec_out,
+        "rta_margin": rta_margin,
         "contained": not violations,
         "violations": violations,
     }
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
-        f.write("\n")
+    write_bench_json(args.out, out)
     for engine in ("quantum", "event"):
         e = engines[engine]
         print(json.dumps({

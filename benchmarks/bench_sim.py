@@ -24,12 +24,22 @@ breakdown under "profile", so the next hot spot is measurable.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import gc
 import json
 import os
 import time
 
+from repro.core import rta as core_rta
 from repro.core.gang import BETask, RTTask
 from repro.core.sim import Simulator, matrix_interference
+from repro.obs.margins import overall
+from repro.obs.metrics import MetricsRegistry
+
+try:
+    from benchmarks.run import write_bench_json
+except ImportError:          # run as `python benchmarks/bench_sim.py`
+    from run import write_bench_json
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -75,11 +85,33 @@ def cores16_taskset():
 
 WORKLOADS = {"fig5_4c": fig5_style_taskset, "cores16": cores16_taskset}
 
+# sound WCET inflation per workload for the margin bounds below: RT
+# gangs run one-at-a-time, so an RT thread only ever co-runs with the
+# best-effort fillers, and the MemoryModel slowdown is the max
+# interference factor against any co-present BE occupant — 1.5 for
+# fig5 (tauX vs be_mem), 1.6 for cores16 (gX vs be0/be2)
+RTA_INFLATION = {"fig5_4c": 1.5, "cores16": 1.6}
 
-def run_engine(workload, dt, horizon: float, profile: bool = False):
+
+def rta_bounds_for(workload: str) -> dict:
+    """Per-task analytic response-time bounds (ms) for the workload:
+    standard gang RTA over BE-interference-inflated WCET clones —
+    measured responses must stay under these (DESIGN.md §12.3)."""
+    _, rts, _, _ = WORKLOADS[workload]()
+    f = RTA_INFLATION[workload]
+    inflated = [dataclasses.replace(t, wcet=t.wcet * f) for t in rts]
+    res = core_rta.schedulable(inflated)
+    assert all(v["ok"] for v in res.values()), \
+        f"{workload}: inflated-WCET RTA must accept (bounds exist)"
+    return {k: v["wcrt"] for k, v in res.items()}
+
+
+def run_engine(workload, dt, horizon: float, profile: bool = False,
+               rta_bounds: dict = None, metrics=None):
     n, rts, bes, intf = WORKLOADS[workload]()
     sim = Simulator(n, rts, be_tasks=bes, interference=intf,
-                    rt_gang_enabled=True, dt=dt, throttle_mode="reactive")
+                    rt_gang_enabled=True, dt=dt, throttle_mode="reactive",
+                    rta_bounds=rta_bounds, metrics=metrics)
     if profile:
         sim.profile = True
     t0 = time.perf_counter()
@@ -94,11 +126,18 @@ def bench_horizon(workload: str, horizon: float, dt: float = 0.05,
     deterministic; repeating filters scheduler noise on loaded hosts).
     The quantum engine runs once — it is 1-2 orders slower and only its
     order of magnitude matters."""
+    bounds = rta_bounds_for(workload)
     e_wall = float("inf")
+    e = None
     for _ in range(max(1, repeats)):
-        e, w, _ = run_engine(workload, None, horizon)
+        e_run, w, _ = run_engine(workload, None, horizon,
+                                 rta_bounds=bounds)
+        e = e_run
         e_wall = min(e_wall, w)
-    q, q_wall, _ = run_engine(workload, dt, horizon)
+    # a quantum completion is stamped up to one dt late: add the
+    # discretization slop to the bounds before comparing (margins.py)
+    q_bounds = {k: b + dt for k, b in bounds.items()}
+    q, q_wall, _ = run_engine(workload, dt, horizon, rta_bounds=q_bounds)
     jobs = sum(len(v) for v in e.response_times.values())
     row = {
         "workload": workload,
@@ -117,6 +156,9 @@ def bench_horizon(workload: str, horizon: float, dt: float = 0.05,
             abs(max(q.response_times[k]) - max(e.response_times[k]))
             for k in e.response_times), 5),
         "misses_equal": q.deadline_misses == e.deadline_misses,
+        "rta_margins_event": e.rta_margins,
+        "rta_margins_quantum": q.rta_margins,
+        "rta_margin": overall(e.rta_margins),
     }
     return row
 
@@ -143,6 +185,57 @@ def profile_event_loop(workload: str, horizon: float) -> dict:
     return out
 
 
+def obs_overhead(horizon: float, repeats: int = 12) -> dict:
+    """Instrumented-vs-bare event-engine throughput on the 16-core
+    workload (ISSUE satellite: the enabled-metrics hot path is plain
+    ``counter.value += 1`` on pre-fetched instruments, and this entry
+    keeps it honest — CI asserts the cost stays under 5% events/s).
+    ``metrics=None`` hands every component a detached (enabled=False)
+    registry, which is the bare baseline.
+
+    Measuring a ~0–1% effect to 5% precision on a noisy shared host
+    takes four defenses at once (each was tried alone and failed):
+    CPU time (``time.process_time``; co-tenant load spikes swing
+    single wall-clock runs ±35% and survive min-of-N), a
+    ``gc.collect`` before every timed run (collection pauses
+    otherwise land in random runs), adjacent bare/instrumented pairs
+    scored by their RATIO (cancels the slow drift of the CPU-time
+    floor that defeats best-of-N), with the order alternated between
+    repetitions (the second run of a pair is systematically slower),
+    and an interquartile-trimmed mean over the pair ratios (kills the
+    remaining spikes). Measured spread of the result: ±1%."""
+    ratios = []
+    cpu_bare = float("inf")
+    events = 0
+    for rep in range(max(2, repeats)):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        pair = {}
+        for metrics_on in order:
+            reg = MetricsRegistry() if metrics_on else None
+            gc.collect()
+            c0 = time.process_time()
+            r, _, _ = run_engine("cores16", None, horizon, metrics=reg)
+            pair[metrics_on] = time.process_time() - c0
+            events = r.events
+        cpu_bare = min(cpu_bare, pair[False])
+        ratios.append(pair[True] / pair[False])
+    ratios.sort()
+    k = len(ratios) // 4
+    core = ratios[k:len(ratios) - k]
+    overhead = sum(core) / len(core) - 1.0
+    bare_eps = events / cpu_bare
+    return {
+        "workload": "cores16",
+        "horizon_ms": horizon,
+        "events": events,
+        "repeats": max(2, repeats),
+        "clock": "process_time",
+        "bare_events_per_sec": round(bare_eps),
+        "metrics_events_per_sec": round(bare_eps / (1.0 + overhead)),
+        "overhead_frac": round(overhead, 4),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -167,11 +260,17 @@ def main():
     row16 = bench_horizon("cores16", h16)
     print(json.dumps(row16))
 
+    # decoupled from h16: short smoke runs are noise-dominated, and the
+    # overhead entry must be stable enough for CI's 5% assert
+    oh = obs_overhead(2000.0)
+    print(json.dumps(oh))
+
     out = {
         "bench": "sim_engines",
         "taskset": "fig5_synthetic (2 RT gangs + 2 BE, reactive throttle)",
         "rows": rows,
         "rows_16c": [row16],
+        "obs_overhead": oh,
     }
     if args.profile:
         out["profile"] = profile_event_loop("cores16", h16)
@@ -200,8 +299,7 @@ def main():
     if entries:
         out["entries"] = entries
 
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
+    write_bench_json(args.out, out)
     print(f"wrote {args.out}")
 
     last = rows[-1]
@@ -209,9 +307,16 @@ def main():
     assert last["misses_equal"], "engines disagree on deadline misses"
     assert last["speedup"] >= target, \
         f"speedup {last['speedup']}x below {target}x at {last['horizon_ms']}ms"
+    for r in rows + [row16]:
+        assert r["rta_margin"]["negative"] == 0, \
+            f"negative RTA margin at {r['workload']}/{r['horizon_ms']}ms"
+    assert oh["metrics_events_per_sec"] >= 0.95 * oh["bare_events_per_sec"], \
+        f"metrics overhead {oh['overhead_frac']:.1%} exceeds 5% events/s"
     print(f"OK: {last['speedup']}x at {last['horizon_ms']}ms "
           f"({last['events_per_sec']} events/s); 16c: "
-          f"{row16['events_per_sec']} events/s")
+          f"{row16['events_per_sec']} events/s; obs overhead "
+          f"{oh['overhead_frac']:.1%}; worst margin "
+          f"{row16['rta_margin']['worst_margin']}ms")
 
 
 if __name__ == "__main__":

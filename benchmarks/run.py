@@ -1,7 +1,55 @@
 """Benchmark harness: one entry per paper table/figure + the roofline bench.
-Prints ``name,value(s)`` lines; full objects go to stdout per-bench."""
+Prints ``name,value(s)`` lines; full objects go to stdout per-bench.
+
+Also home of :func:`write_bench_json` — the single writer every
+``BENCH_*.json`` goes through, so each artifact carries the same
+provenance header (schema version, host fingerprint, git SHA) and the
+bench scripts stop hand-rolling their own ``json.dump`` epilogues."""
+import json
+import os
+import platform
+import subprocess
 import sys
 import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# bump when the shared header or any BENCH_*.json payload shape changes
+# incompatibly (consumers: CI smoke checks, examples/)
+BENCH_SCHEMA_VERSION = 2
+
+
+def git_sha() -> "str | None":
+    """HEAD commit of the repo the benches ran from (None outside a
+    checkout — e.g. a source tarball)."""
+    try:
+        p = subprocess.run(["git", "rev-parse", "HEAD"], cwd=ROOT,
+                           capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = p.stdout.strip()
+    return sha if p.returncode == 0 and sha else None
+
+
+def write_bench_json(path: str, payload: dict) -> str:
+    """Stamp the provenance header onto ``payload`` and write it.
+
+    The header keys (``schema_version``, ``git_sha``, ``host``) are
+    reserved: a payload supplying its own values for them is a bug, so
+    they always win over the payload."""
+    doc = dict(payload)
+    doc["schema_version"] = BENCH_SCHEMA_VERSION
+    doc["git_sha"] = git_sha()
+    doc["host"] = {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -35,7 +83,7 @@ def main() -> None:
     print("== sim engines (event-driven vs fixed-quantum, smoke) ==")
     from benchmarks import bench_sim
     for h in (120.0, 1000.0):
-        print(bench_sim.bench_horizon(h))
+        print(bench_sim.bench_horizon("fig5_4c", h))
 
     print("== roofline (per arch x shape x mesh; dry-run cache) ==")
     rows = roofline_bench.run()

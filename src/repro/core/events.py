@@ -107,7 +107,7 @@ class EventEngine:
 
     # -----------------------------------------------------------------
     def run(self, horizon: float):
-        from repro.core.sim import Job, SimResult
+        from repro.core.sim import Job
 
         sim = self.sim
         n = sim.n_cores
@@ -162,15 +162,19 @@ class EventEngine:
             dirty.update(cores)
         sched.reschedule_cpus = _resched
 
+        # reclaim-grant voiding + the gang-event log live in the shared
+        # Simulator.gang_hook (the quantum engine installs the same
+        # callbacks); cur_t keeps the log stamped with event time
+        cur_t = [0.0]
+        extra_hook = sim.gang_hook(cur_t)
+
         def _gang_change(event, leader):
             # joins/leaves mark the regime dirty but are membership
             # churn, not lock hand-offs — keep the metric's meaning
             if event in ("acquire", "release", "preempt"):
                 self.handoffs += 1
-            if reclaim and event == "acquire":
-                # donation grants are per-regime: void them the moment
-                # a gang takes the lock (quantum engine does the same)
-                reg.reset_reclaim()
+            if extra_hook is not None:
+                extra_hook(event, leader)
             self._gang_dirty = True
         sched.on_gang_change = _gang_change
 
@@ -578,6 +582,7 @@ class EventEngine:
         changed.clear()
         while True:
             now = min(heap[0][0], horizon) if heap else horizon
+            cur_t[0] = now
             if profile:
                 t_p, a0 = perf(), phase_wall["advance"]
             comp = ()
@@ -708,15 +713,8 @@ class EventEngine:
             elif profile:
                 timed("rates", t_p, a0)
 
-        throttle_events = sum(st.throttle_events
-                              for st in reg.cores.values())
-        return SimResult(
-            trace=trace, response_times=response, deadline_misses=misses,
-            be_progress=be_progress, throttle_events=throttle_events,
-            ipis=sched.g.ipis_sent, preemptions=sched.g.preemptions,
-            slack_time=slack, horizon=horizon,
-            events=self.events_processed, engine="event",
-            reclaimed=reg.total_reclaimed,
-            miss_times=miss_times,
-            faults=fm.summary()
-            if (fm.enf is not None or fm.plan.faults) else None)
+        return sim.finalize_result(
+            trace, response, misses, miss_times, be_progress, slack,
+            horizon,
+            releases={t.name: tstate[t.uid].released for t in tasks},
+            events=self.events_processed, engine="event")

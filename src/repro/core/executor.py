@@ -104,7 +104,8 @@ class GangExecutor:
                  backup_dispatch: bool = False,
                  budget_policy=None, reclaim: bool = False,
                  watchdog_s: Optional[float] = None,
-                 watchdog_factor: Optional[float] = None):
+                 watchdog_factor: Optional[float] = None,
+                 metrics=None):
         """``budget_policy``: optional object with ``apply(glock,
         regulator)`` — the same interface ``Simulator`` takes
         (vgang/sched.py) — invoked from the gang-change hook to set
@@ -131,7 +132,14 @@ class GangExecutor:
         self.n_lanes = n_lanes
         self.enabled = enabled
         self.budget_policy = budget_policy
-        self.sched = GangScheduler(n_lanes, enabled=enabled)
+        # observability (DESIGN.md §12): one registry shared with the
+        # glock and regulator; None = detached instruments (bare mode)
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics = metrics
+        self._mreg = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self.sched = GangScheduler(n_lanes, enabled=enabled,
+                                   metrics=self._mreg)
         # wake blocked lanes promptly on gang hand-off (lock released or
         # preempted) instead of having them poll. Lock order: glock.g.lock
         # is only ever taken *outside* self._lock, so notifying under
@@ -139,7 +147,8 @@ class GangExecutor:
         self.sched.on_gang_change = self._on_gang_change
         self.reg = BandwidthRegulator(n_lanes,
                                       interval=regulation_interval_s,
-                                      mode="admission", reclaim=reclaim)
+                                      mode="admission", reclaim=reclaim,
+                                      metrics=self._mreg)
         self.trace = Trace(n_lanes)
         self.rt_jobs: List[RTJob] = []
         self.be_jobs: List[BEJob] = []
@@ -160,8 +169,12 @@ class GangExecutor:
         self.backup_dispatch = backup_dispatch
         self.stragglers: List[Tuple[str, int, float]] = []
         self.response_times: Dict[str, List[float]] = {}
-        self.be_quanta: Dict[str, int] = {}
-        self.rt_stalls: Dict[str, int] = {}   # RT quanta delayed by a stall
+        # per-name obs.metrics counters (executor.* series); the
+        # be_quanta / rt_stalls / aborted properties expose the
+        # historical plain-dict views
+        self._be_q: Dict[str, object] = {}
+        self._stall_c: Dict[str, object] = {}
+        self._abort_c: Dict[str, object] = {}
         self._ema: Dict[str, float] = {}
         self._budget_sig = None     # last glock state budgets derive from
         # gang prios whose in-flight quanta were still draining when the
@@ -181,7 +194,26 @@ class GangExecutor:
         self.watchdog_factor = watchdog_factor
         self._inflight_info: Dict[int, tuple] = {}
         self.watchdog_aborts: List[Tuple[str, int, int, float]] = []
-        self.aborted: Dict[str, int] = {}
+
+    # compatibility dict views over the executor.* metric counters
+    @property
+    def be_quanta(self) -> Dict[str, int]:
+        return {k: int(c.value) for k, c in self._be_q.items()}
+
+    @property
+    def rt_stalls(self) -> Dict[str, int]:
+        return {k: int(c.value) for k, c in self._stall_c.items()}
+
+    @property
+    def aborted(self) -> Dict[str, int]:
+        return {k: int(c.value) for k, c in self._abort_c.items()}
+
+    def _counter_for(self, table: Dict[str, object], series: str,
+                     name: str):
+        c = table.get(name)
+        if c is None:
+            c = table[name] = self._mreg.counter(series, gang=name)
+        return c
 
     # ------------------------------------------------------------------
     def submit_rt(self, job: RTJob):
@@ -212,7 +244,7 @@ class GangExecutor:
 
     def submit_be(self, job: BEJob):
         self.be_jobs.append(job)
-        self.be_quanta.setdefault(job.name, 0)
+        self._counter_for(self._be_q, "executor.be_quanta", job.name)
 
     def submit_vgang(self, vg, fns: Dict[str, Callable[[int, int], None]],
                      *, n_jobs: Optional[int] = None,
@@ -523,8 +555,8 @@ class GangExecutor:
                 # the window was tripped by our own charge or was
                 # already spent (e.g. by a best-effort filler)
                 with self._lock:
-                    self.rt_stalls[job.name] = \
-                        self.rt_stalls.get(job.name, 0) + 1
+                    self._counter_for(self._stall_c, "executor.rt_stalls",
+                                      job.name).value += 1
             stalled = True
             wait = self.reg.next_release(lane, now) - now
             with self._wake:
@@ -625,8 +657,8 @@ class GangExecutor:
                 inst.remaining_lanes.clear()
                 self.watchdog_aborts.append(
                     (job.name, lane, idx, self._now()))
-                self.aborted[job.name] = \
-                    self.aborted.get(job.name, 0) + 1
+                self._counter_for(self._abort_c, "executor.aborted",
+                                  job.name).value += 1
         if first:
             g = self.sched.g
             for ln in job.lanes:
@@ -745,7 +777,7 @@ class GangExecutor:
                     with self._lock:
                         self.trace.record(lane, be.name,
                                           t0 * 1e3, t1 * 1e3)
-                        self.be_quanta[be.name] += 1
+                        self._be_q[be.name].value += 1
                     ran_be = True
                     break
             if not ran_be:
@@ -794,4 +826,6 @@ class GangExecutor:
             "reclaimed_bytes": self.reg.total_reclaimed,
             "watchdog_aborts": list(self.watchdog_aborts),
             "aborted": dict(self.aborted),
+            "metrics": self.metrics.snapshot()
+            if self.metrics is not None else None,
         }

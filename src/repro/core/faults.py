@@ -57,6 +57,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.gang import RTTask, Thread
+from repro.obs.metrics import MetricsRegistry
 
 _EPS = 1e-9
 
@@ -246,7 +247,8 @@ class FaultManager:
 
     def __init__(self, tasks: Sequence[RTTask],
                  plan: Optional[FaultPlan],
-                 enforcement: Optional[Enforcement]):
+                 enforcement: Optional[Enforcement],
+                 metrics: Optional[MetricsRegistry] = None):
         self.plan = plan or FaultPlan()
         self.enf = enforcement
         self.tasks = {t.uid: t for t in tasks}
@@ -264,13 +266,36 @@ class FaultManager:
         self._misses: Optional[Dict[str, int]] = None
         self._miss_times: Optional[Dict[str, List[float]]] = None
         self._response: Optional[Dict[str, List[float]]] = None
-        self.stats = {
-            "injected_overruns": 0, "injected_hangs": 0,
-            "injected_lost_wakeups": 0,
-            "enforced": {"abort": 0, "demote": 0, "degrade": 0},
-            "watchdog_fires": 0, "lock_leaks": 0,
-            "aborted_jobs": [],                  # (name, index, time)
-            "by_task": {},
+        # fault counts are obs.metrics parity counters — both engines
+        # must inject and enforce identically (tests/test_obs.py)
+        reg = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self.metrics = metrics
+        self._inj = {k: reg.counter("faults.injected", parity=True, kind=k)
+                     for k in ("overrun", "hang", "lost_wakeup")}
+        self._enf_counts = {a: reg.counter("faults.enforced", parity=True,
+                                           action=a)
+                            for a in ("abort", "demote", "degrade")}
+        self._watchdog = reg.counter("faults.watchdog_fires", parity=True)
+        self._leaks = reg.counter("faults.lock_leaks", parity=True)
+        self._aborted_jobs: List[Tuple[str, int, float]] = []
+        self._by_task: Dict[str, Dict[str, int]] = {}
+
+    @property
+    def stats(self) -> Dict:
+        """The historical stats-dict shape, assembled from the metric
+        counters (``aborted_jobs``/``by_task`` are shared references —
+        ``summary()`` is the copying accessor)."""
+        return {
+            "injected_overruns": int(self._inj["overrun"].value),
+            "injected_hangs": int(self._inj["hang"].value),
+            "injected_lost_wakeups": int(self._inj["lost_wakeup"].value),
+            "enforced": {a: int(c.value)
+                         for a, c in self._enf_counts.items()},
+            "watchdog_fires": int(self._watchdog.value),
+            "lock_leaks": int(self._leaks.value),
+            "aborted_jobs": self._aborted_jobs,
+            "by_task": self._by_task,
         }
 
     # -- wiring -------------------------------------------------------
@@ -295,7 +320,7 @@ class FaultManager:
             counts[core] = k
             for sp in specs:
                 if sp.core == core and sp.nth == k:
-                    self.stats["injected_lost_wakeups"] += 1
+                    self._inj["lost_wakeup"].value += 1
                     return until + sp.extra
             return until
 
@@ -310,9 +335,9 @@ class FaultManager:
         f = self.plan.overrun_factor(t.name, job.index)
         hung = self.plan.hung_threads(t.name, job.index)
         if f > 1.0:
-            self.stats["injected_overruns"] += 1
+            self._inj["overrun"].value += 1
         if hung:
-            self.stats["injected_hangs"] += len(hung)
+            self._inj["hang"].value += len(hung)
         if f > 1.0 or hung:
             for i, c in enumerate(t.cores):
                 if i in hung:
@@ -373,15 +398,15 @@ class FaultManager:
         if via == "watchdog":
             if r.enforced in ("abort", "demote"):
                 return None          # already off the RT path
-            self.stats["watchdog_fires"] += 1
+            self._watchdog.value += 1
             action = "abort"
         else:
             if r.enforced is not None:
                 return None
             action = self.enf.action
         r.enforced = action
-        self.stats["enforced"][action] += 1
-        per = self.stats["by_task"].setdefault(
+        self._enf_counts[action].value += 1
+        per = self._by_task.setdefault(
             job.task.name, {"abort": 0, "demote": 0, "degrade": 0})
         per[action] += 1
         if action in ("abort", "demote"):
@@ -396,7 +421,7 @@ class FaultManager:
         name = job.task.name
         self._misses[name] += 1
         self._miss_times[name].append(now)
-        self.stats["aborted_jobs"].append((name, job.index, now))
+        self._aborted_jobs.append((name, job.index, now))
 
     def audit(self, g, has_work) -> None:
         """Called by the engine after the scheduling round that follows
@@ -408,7 +433,7 @@ class FaultManager:
             for th in g.gthreads:
                 if th is not None and th.task.uid == t.uid and \
                         not has_work(t.uid, th.core):
-                    self.stats["lock_leaks"] += 1
+                    self._leaks.value += 1
 
     # -- demoted-residual pool ---------------------------------------
     def begin_demote(self, job, now: float) -> None:
@@ -486,9 +511,7 @@ class FaultManager:
 
     # -- reporting ----------------------------------------------------
     def summary(self) -> Dict:
-        out = {k: (dict(v) if isinstance(v, dict) else
-                   list(v) if isinstance(v, list) else v)
-               for k, v in self.stats.items()}
-        out["by_task"] = {k: dict(v)
-                          for k, v in self.stats["by_task"].items()}
+        out = self.stats
+        out["aborted_jobs"] = list(out["aborted_jobs"])
+        out["by_task"] = {k: dict(v) for k, v in out["by_task"].items()}
         return out

@@ -16,6 +16,7 @@ import threading
 from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.gang import RTTask, Thread
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -28,14 +29,33 @@ class GLock:
     leader: Optional[RTTask] = None
     gthreads: List[Optional[Thread]] = dataclasses.field(default=None)
     lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
-    # instrumentation
-    acquisitions: int = 0
-    preemptions: int = 0
-    ipis_sent: int = 0
+    # instrumentation lives in a MetricsRegistry (obs.metrics); pass one
+    # to label/collect the series, or leave None for detached counters
+    metrics: Optional[MetricsRegistry] = None
 
     def __post_init__(self):
         if self.gthreads is None:
             self.gthreads = [None] * self.n_cores
+        reg = self.metrics if self.metrics is not None \
+            else MetricsRegistry(enabled=False)
+        # parity contract: both simulator engines must reproduce these
+        # exactly (tests/test_obs.py)
+        self.acq = reg.counter("glock.acquisitions", parity=True)
+        self.preempt = reg.counter("glock.preemptions", parity=True)
+        self.ipi = reg.counter("glock.ipis", parity=True)
+
+    # compatibility views over the metric counters
+    @property
+    def acquisitions(self) -> int:
+        return int(self.acq.value)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self.preempt.value)
+
+    @property
+    def ipis_sent(self) -> int:
+        return int(self.ipi.value)
 
     # ---- bitmask helpers ---------------------------------------------------
     def _set(self, mask: int, cpu: int) -> int:
@@ -61,8 +81,9 @@ class GangScheduler:
 
     def __init__(self, n_cores: int,
                  reschedule_cpus: Optional[Callable[[List[int]], None]] = None,
-                 enabled: bool = True):
-        self.g = GLock(n_cores=n_cores)
+                 enabled: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.g = GLock(n_cores=n_cores, metrics=metrics)
         self.reschedule_cpus = reschedule_cpus or (lambda cores: None)
         self.enabled = enabled   # paper: runtime toggle via sched_features
         # gang hand-off hook: called with ("acquire"|"join"|"leave"|
@@ -88,7 +109,7 @@ class GangScheduler:
         g.blocked_cores = g._clear(g.blocked_cores, cpu)
         g.leader = thread.task
         g.gthreads[cpu] = thread
-        g.acquisitions += 1
+        g.acq.value += 1
         if self.on_gang_change is not None:
             self.on_gang_change("acquire", g.leader)
 
@@ -115,7 +136,7 @@ class GangScheduler:
             g.leader = None
             blocked = g.cores_in(g.blocked_cores)
             if blocked:
-                g.ipis_sent += len(blocked)
+                g.ipi.value += len(blocked)
                 self.reschedule_cpus(blocked)
             g.blocked_cores = 0
             if self.on_gang_change is not None:
@@ -134,8 +155,8 @@ class GangScheduler:
         g = self.g
         victims = g.cores_in(g.locked_cores)
         if victims:
-            g.ipis_sent += len(victims)
-            g.preemptions += 1
+            g.ipi.value += len(victims)
+            g.preempt.value += 1
             self.reschedule_cpus(victims)
         g.locked_cores = 0
         for cpu in victims:

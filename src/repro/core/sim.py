@@ -25,6 +25,8 @@ from repro.core.glock import GangScheduler
 from repro.core.memmodel import BE, MemoryModel
 from repro.core.throttle import BandwidthRegulator
 from repro.core.tracing import Trace
+from repro.obs.margins import margin_summary
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -80,6 +82,12 @@ class SimResult:
     miss_times: Dict[str, List[float]] = dataclasses.field(
         default_factory=dict)
     faults: Optional[Dict] = None        # FaultManager.summary() when armed
+    # observability (DESIGN.md §12): RTA-margin summary per task (when
+    # the run was given analytic bounds), and the metric snapshots
+    # (when the run was given a MetricsRegistry)
+    rta_margins: Optional[Dict] = None   # obs.margins.margin_summary()
+    metrics: Optional[Dict] = None       # MetricsRegistry.snapshot()
+    parity_metrics: Optional[Dict] = None  # engine-parity counters only
 
     def wcrt(self, name: str) -> float:
         rs = self.response_times.get(name) or [float("nan")]
@@ -119,7 +127,10 @@ class Simulator:
                  budget_policy: Optional["BudgetPolicy"] = None,
                  reclaim: bool = False,
                  fault_plan: Optional[FaultPlan] = None,
-                 enforcement: Optional[Enforcement] = None):
+                 enforcement: Optional[Enforcement] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 rta_bounds: Optional[Dict[str, float]] = None,
+                 record_counters: bool = False):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
         same SimResult, O(events) instead of O(horizon/dt).
@@ -146,7 +157,17 @@ class Simulator:
         and enforcement decisions are engine-identical. Passing an
         ``enforcement`` policy additionally runs the strict
         ``validate_declared`` check: enforcement budgets are derived
-        from declarations, so the declarations must be trustworthy."""
+        from declarations, so the declarations must be trustworthy.
+
+        Observability (DESIGN.md §12): ``metrics`` plumbs one
+        MetricsRegistry through the scheduler, regulator and fault
+        layer and stamps its snapshots into the SimResult (None = the
+        components run detached instruments, the bare mode).
+        ``rta_bounds`` maps task name -> analytic response-time bound
+        (ms); every completed job's margin against it is summarized in
+        ``SimResult.rta_margins``. ``record_counters`` keeps the
+        regulator's per-window history and the gang-change log for
+        Perfetto counter tracks (obs.perfetto.export_sim)."""
         validate_taskset(rt_tasks)
         if not regulation_interval > 0.0:
             raise ValueError(
@@ -162,9 +183,18 @@ class Simulator:
         self.interference = interference
         self.dt = dt
         self.budget_policy = budget_policy
-        self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled)
+        self.metrics = metrics
+        self.rta_bounds = dict(rta_bounds) if rta_bounds else None
+        self.record_counters = record_counters
+        mreg = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self._mreg = mreg
+        self.sched = GangScheduler(n_cores, enabled=rt_gang_enabled,
+                                   metrics=mreg)
         self.reg = BandwidthRegulator(n_cores, interval=regulation_interval,
-                                      mode=throttle_mode, reclaim=reclaim)
+                                      mode=throttle_mode, reclaim=reclaim,
+                                      metrics=mreg,
+                                      record_history=record_counters)
         self.mm = MemoryModel(n_cores, interference, self.reg)
         self.trace = Trace(n_cores)
         self.profile = False        # event engine: record phase breakdown
@@ -178,8 +208,21 @@ class Simulator:
                          for cands in self.be_cands]
         # fault injection + enforcement state machine (shared by both
         # engines; a no-op shell when neither plan nor policy is given)
-        self.fm = FaultManager(rt_tasks, fault_plan, enforcement)
+        self.fm = FaultManager(rt_tasks, fault_plan, enforcement,
+                               metrics=mreg)
         self.fm.install(self.reg)
+        # per-task parity counters, pre-created at construction so both
+        # engines' registries index identical series even for tasks
+        # that never release or complete within the horizon; trued up
+        # from the authoritative result dicts in ``finalize_result``
+        self._task_counters = {t.name: (
+            mreg.counter("task.releases", parity=True, gang=t.name),
+            mreg.counter("task.completions", parity=True, gang=t.name),
+            mreg.counter("task.misses", parity=True, gang=t.name))
+            for t in self.rt_tasks}
+        # gang-change log for the Perfetto glock-hold counter track:
+        # (t, event, leader name) — filled only when record_counters
+        self.gang_events: List[Tuple[float, str, Optional[str]]] = []
         # a lying BE task charges its *actual* (inflated) traffic — the
         # regulator contains the overrun by construction
         bef = self.fm.plan.be_factor
@@ -207,6 +250,73 @@ class Simulator:
             return self.reg.set_core_budgets(
                 {c: None for c in occupied}, default=g.leader.mem_budget)
         return self.reg.set_gang_budget(None)
+
+    def gang_hook(self, time_cell: List[float]):
+        """Compose the gang-change callbacks a run needs: reclaim-grant
+        voiding on acquire, and the gang-event log (Perfetto glock-hold
+        counter track) stamped at the driving engine's current time —
+        the engine keeps ``time_cell[0]`` current. Returns None when
+        there is nothing to observe."""
+        hooks = []
+        if self.reg.reclaim:
+            hooks.append(lambda ev, ldr: self.reg.reset_reclaim()
+                         if ev == "acquire" else None)
+        if self.record_counters:
+            log = self.gang_events
+            hooks.append(lambda ev, ldr: log.append(
+                (time_cell[0], ev, None if ldr is None else ldr.name)))
+        if not hooks:
+            return None
+        if len(hooks) == 1:
+            return hooks[0]
+
+        def fire(ev, ldr):
+            for h in hooks:
+                h(ev, ldr)
+        return fire
+
+    def finalize_result(self, trace: Trace,
+                        response: Dict[str, List[float]],
+                        misses: Dict[str, int],
+                        miss_times: Dict[str, List[float]],
+                        be_progress: Dict[str, float],
+                        slack: float, horizon: float,
+                        releases: Dict[str, int],
+                        events: int = 0,
+                        engine: str = "quantum") -> SimResult:
+        """Shared result assembly for both engines: true up the
+        per-task parity counters from the authoritative result dicts
+        (releases/completions/misses — including enforcement aborts and
+        late demoted completions, which the FaultManager folds into the
+        same dicts), compute RTA margins against any declared bounds,
+        and stamp the metric snapshots."""
+        fm = self.fm
+        for name, (c_rel, c_comp, c_miss) in self._task_counters.items():
+            c_rel.value = releases.get(name, 0)
+            c_comp.value = len(response.get(name) or ())
+            c_miss.value = misses.get(name, 0)
+        rta_margins = None
+        if self.rta_bounds:
+            rta_margins = margin_summary(response, self.rta_bounds,
+                                         metrics=self.metrics)
+        throttle_events = sum(st.throttle_events
+                              for st in self.reg.cores.values())
+        return SimResult(
+            trace=trace, response_times=response, deadline_misses=misses,
+            be_progress=be_progress, throttle_events=throttle_events,
+            ipis=self.sched.g.ipis_sent,
+            preemptions=self.sched.g.preemptions,
+            slack_time=slack, horizon=horizon,
+            events=events, engine=engine,
+            reclaimed=self.reg.total_reclaimed,
+            miss_times=miss_times,
+            faults=fm.summary()
+            if (fm.enf is not None or fm.plan.faults) else None,
+            rta_margins=rta_margins,
+            metrics=self.metrics.snapshot()
+            if self.metrics is not None else None,
+            parity_metrics=self.metrics.parity_snapshot()
+            if self.metrics is not None else None)
 
     # -----------------------------------------------------------------
     def run(self, horizon: float) -> SimResult:
@@ -272,14 +382,12 @@ class Simulator:
 
         dirty = set(range(self.n_cores))
         self.sched.reschedule_cpus = lambda cores: dirty.update(cores)
-        if self.reg.reclaim:
-            # donation grants are per-regime: a new gang taking the
-            # lock voids them (same hook instant as the event engine's)
-            self.sched.on_gang_change = lambda event, leader: \
-                self.reg.reset_reclaim() if event == "acquire" else None
+        time_cell = [0.0]
+        self.sched.on_gang_change = self.gang_hook(time_cell)
 
         for step in range(nsteps):
             now = step * dt
+            time_cell[0] = now
             release_jobs(now)
 
             # ---- scheduling passes until fixed point --------------------
@@ -452,16 +560,7 @@ class Simulator:
                         if j.aborted:
                             fm.maybe_restore(t.uid, j.index)
 
-        throttle_events = sum(st.throttle_events
-                              for st in self.reg.cores.values())
-        return SimResult(
-            trace=self.trace, response_times=response,
-            deadline_misses=misses, be_progress=be_progress,
-            throttle_events=throttle_events,
-            ipis=self.sched.g.ipis_sent,
-            preemptions=self.sched.g.preemptions,
-            slack_time=slack, horizon=horizon,
-            reclaimed=self.reg.total_reclaimed,
-            miss_times=miss_times,
-            faults=fm.summary()
-            if (fm.enf is not None or fm.plan.faults) else None)
+        return self.finalize_result(
+            self.trace, response, misses, miss_times, be_progress,
+            slack, horizon,
+            releases={t.name: len(jobs[t.uid]) for t in self.rt_tasks})

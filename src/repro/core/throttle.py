@@ -41,7 +41,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Iterable, Optional, Set
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.obs.metrics import Counter, Gauge, MetricsRegistry
 
 _INF = float("inf")
 
@@ -50,22 +52,42 @@ _INF = float("inf")
 class ThrottleState:
     budget: float                # allowed traffic per interval (bytes/units)
     interval: float = 1.0        # regulation interval (ms in the sim)
+    core: int = -1               # which core this state regulates
     used: float = 0.0
     window_start: float = 0.0
     stalled_until: float = 0.0
     # dynamic reclaiming (per-window, reset on roll — DESIGN.md §7.5)
     donated: float = 0.0         # quota pulled out of this core's window
     drawn: float = 0.0           # quota granted to this core's window
-    # instrumentation
-    throttle_events: int = 0
-    total_used: float = 0.0
-    total_denied: float = 0.0
+    # instrumentation: obs.metrics instruments — the regulator binds
+    # registry-owned series (throttle.trips{core=} is on the engine
+    # parity contract) or detached instances when unmetered
+    trips: Counter = dataclasses.field(default_factory=Counter)
+    used_total: Counter = dataclasses.field(default_factory=Counter)
+    denied_total: Counter = dataclasses.field(default_factory=Counter)
     # worst observed charge past the per-window limit (the enforcement
     # invariant ``used <= limit`` up to one accounting quantum; the
     # event engine's closed-form charging keeps this at float epsilon,
     # the quantum engine at one reactive overshoot <= rate x dt, and
     # admission mode at exactly 0 — asserted by tests/test_faults.py)
-    max_overrun: float = 0.0
+    overrun: Gauge = dataclasses.field(default_factory=Gauge)
+
+    # compatibility views over the metric instruments
+    @property
+    def throttle_events(self) -> int:
+        return int(self.trips.value)
+
+    @property
+    def total_used(self) -> float:
+        return self.used_total.value
+
+    @property
+    def total_denied(self) -> float:
+        return self.denied_total.value
+
+    @property
+    def max_overrun(self) -> float:
+        return self.overrun.value
 
     @property
     def limit(self) -> float:
@@ -80,21 +102,41 @@ class BandwidthRegulator:
     """Per-core regulator bank; budget is set by the running gang."""
 
     def __init__(self, n_cores: int, interval: float = 1.0,
-                 mode: str = "reactive", reclaim: bool = False):
+                 mode: str = "reactive", reclaim: bool = False,
+                 metrics: Optional[MetricsRegistry] = None,
+                 record_history: bool = False):
         assert mode in ("reactive", "admission")
         self.mode = mode
         self.interval = interval
         self.reclaim = reclaim
-        self.total_reclaimed = 0.0   # units drawn from donors, lifetime
         # fault-injection hook (core/faults.py "lost wakeup"): every
         # stall routes its stall-until through this callable(core, t) ->
         # t', so a fault plan can delay or drop the window-end wakeup.
         # None = stalls land exactly at the window boundary.
         self.stall_fault = None
+        reg = metrics if metrics is not None \
+            else MetricsRegistry(enabled=False)
+        self.metrics = metrics
+        self._reclaimed = reg.counter("reclaim.drawn")
         self.cores: Dict[int, ThrottleState] = {
-            c: ThrottleState(budget=float("inf"), interval=interval)
+            c: ThrottleState(
+                budget=float("inf"), interval=interval, core=c,
+                trips=reg.counter("throttle.trips", parity=True, core=c),
+                used_total=reg.counter("throttle.used_total", core=c),
+                denied_total=reg.counter("throttle.denied_total", core=c),
+                overrun=reg.gauge("throttle.max_overrun", core=c))
             for c in range(n_cores)}
+        # counter-track samples for the Perfetto export (obs.perfetto):
+        # ("window", t_end, core, used, limit) per closed finite-budget
+        # window, ("draw", t, cumulative) per reclaim transfer. Opt-in:
+        # unbounded growth is wrong for long executor runs.
+        self.history: Optional[List[Tuple]] = [] if record_history else None
         self._lock = threading.Lock()
+
+    @property
+    def total_reclaimed(self) -> float:
+        """Units drawn from donors, lifetime."""
+        return self._reclaimed.value
 
     def set_gang_budget(self, budget: Optional[float]) -> Set[int]:
         """Called on gang-lock acquisition: the new gang's declared budget is
@@ -157,9 +199,7 @@ class BandwidthRegulator:
         overrun, and is excluded."""
         if st.budget == _INF or before > st.limit + 1e-12:
             return
-        over = st.used - st.limit
-        if over > st.max_overrun:
-            st.max_overrun = over
+        st.overrun.update_max(st.used - st.limit)
 
     def max_overrun(self) -> float:
         """Worst charge past a per-window limit across all cores."""
@@ -168,6 +208,16 @@ class BandwidthRegulator:
     def _roll_window(self, st: ThrottleState, now: float) -> None:
         delta = now - st.window_start
         if delta >= st.interval:
+            if self.history is not None and st.budget != _INF:
+                t_end = st.window_start + st.interval
+                self.history.append(
+                    ("window", t_end, st.core, st.used, st.limit))
+                if delta >= 2 * st.interval:
+                    # skipped windows carried no usage: one zero sample
+                    # steps the counter track down instead of holding
+                    self.history.append(
+                        ("window", t_end + st.interval, st.core,
+                         0.0, st.budget))
             # jump directly to the window containing ``now`` (O(1) even
             # after a long idle gap; every skipped window resets usage)
             st.window_start += int(delta / st.interval) * st.interval
@@ -199,23 +249,23 @@ class BandwidthRegulator:
         st = self.cores[core]
         self._roll_window(st, now)
         if now < st.stalled_until:
-            st.total_denied += amount
+            st.denied_total.value += amount
             return 0.0
         limit = st.limit
         if self.mode == "admission":
             if st.used + amount > limit:
-                st.throttle_events += 1
-                st.total_denied += amount
+                st.trips.value += 1
+                st.denied_total.value += amount
                 self._set_stall(core, st)
                 return 0.0
             st.used += amount
-            st.total_used += amount
+            st.used_total.value += amount
             return 1.0
         before = st.used
         st.used += amount
-        st.total_used += amount
+        st.used_total.value += amount
         if st.used > limit:
-            st.throttle_events += 1
+            st.trips.value += 1
             self._note_overrun(st, before)
             self._set_stall(core, st)
             if amount <= 0.0:
@@ -236,7 +286,7 @@ class BandwidthRegulator:
         if now < st.stalled_until:
             return True
         if st.used > st.limit + 1e-12:
-            st.throttle_events += 1
+            st.trips.value += 1
             self._set_stall(core, st)
             return True
         return False
@@ -273,7 +323,7 @@ class BandwidthRegulator:
             self._roll_window(st, t1)
             before = 0.0
             st.used = rate * (t1 - st.window_start)
-        st.total_used += amount
+        st.used_total.value += amount
         self._note_overrun(st, before)
 
     def next_trip_time(self, core: int, rate: float, now: float) -> float:
@@ -303,7 +353,7 @@ class BandwidthRegulator:
         (the budget was exhausted at ``now``)."""
         st = self.cores[core]
         self._roll_window(st, now)
-        st.throttle_events += 1
+        st.trips.value += 1
         self._set_stall(core, st)
 
     # ---- dynamic reclaiming (DESIGN.md §7.5) -------------------------
@@ -362,7 +412,9 @@ class BandwidthRegulator:
         st = self.cores[drawer]
         self._roll_window(st, now)
         st.drawn += take
-        self.total_reclaimed += take
+        self._reclaimed.value += take
+        if self.history is not None:
+            self.history.append(("draw", now, self._reclaimed.value))
         return take
 
     def unstall(self, core: int) -> None:

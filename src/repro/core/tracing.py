@@ -3,7 +3,9 @@ ASCII renderer and CSV export, used by the simulator, the executor and the
 Fig.5 benchmark."""
 from __future__ import annotations
 
+import csv
 import dataclasses
+import io
 from typing import Dict, List, Optional, Tuple
 
 
@@ -64,11 +66,36 @@ class Trace:
             self.finish()
 
     def to_csv(self) -> str:
+        """CSV with properly quoted labels. ``throttled:<task>`` /
+        ``dem:<task>`` labels (and any future label containing a comma
+        or quote) round-trip through a standard CSV reader; an idle
+        (None) segment writes an empty field, distinct from a literal
+        task named "idle"."""
         self.finish_view()
-        lines = ["core,label,t0,t1"]
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(["core", "label", "t0", "t1"])
         for s in self.segments:
-            lines.append(f"{s.core},{s.label or 'idle'},{s.t0:.4f},{s.t1:.4f}")
-        return "\n".join(lines)
+            w.writerow([s.core, "" if s.label is None else s.label,
+                        f"{s.t0:.4f}", f"{s.t1:.4f}"])
+        return buf.getvalue().rstrip("\n")
+
+    @classmethod
+    def from_csv(cls, text: str, n_cores: Optional[int] = None) -> "Trace":
+        """Inverse of ``to_csv`` (modulo the 1e-4 ms timestamp
+        rounding)."""
+        rows = list(csv.reader(io.StringIO(text)))
+        assert rows and rows[0] == ["core", "label", "t0", "t1"], \
+            "not a Trace CSV"
+        body = [(int(c), lab or None, float(t0), float(t1))
+                for c, lab, t0, t1 in rows[1:]]
+        if n_cores is None:
+            n_cores = max((c for c, *_ in body), default=-1) + 1
+        tr = cls(n_cores)
+        for core, lab, t0, t1 in body:
+            tr.segments.append(Segment(core, lab, t0, t1))
+        tr.segments.sort(key=lambda s: (s.core, s.t0))
+        return tr
 
     def render_ascii(self, t_end: Optional[float] = None, width: int = 100,
                      t_start: float = 0.0) -> str:
@@ -86,7 +113,13 @@ class Trace:
                 letters[lab] = "~"
             else:
                 letters[lab] = alphabet[i % len(alphabet)]
+        # a single-instant trace (every segment at one timestamp, or an
+        # explicit t_end == t_start) has no extent to scale into the
+        # row — render the instant as one column instead of dividing
+        # by zero
         span = t_end - t_start
+        if span <= 0:
+            span, width = 1.0, 1
         rows = []
         for c in range(self.n_cores):
             row = ["."] * width

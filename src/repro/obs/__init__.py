@@ -1,0 +1,25 @@
+"""Unified observability layer (DESIGN.md §12).
+
+Three pieces, built to be shared by both simulator engines, the
+wall-clock executor and the vgang grid:
+
+* ``obs.metrics``  — a MetricsRegistry of counters/gauges/histograms
+  with labeled series; the engines' ad-hoc counter fields now live
+  here, and the integer counters marked ``parity=True`` form the
+  engine-parity contract (both engines must produce byte-identical
+  ``parity_snapshot()`` values on the fig4/fig5 workloads).
+* ``obs.perfetto`` — Chrome-trace/Perfetto JSON export of
+  ``core.tracing.Trace`` timelines plus counter tracks (per-window
+  bandwidth, donation pool, glock hold time), viewable in
+  ui.perfetto.dev — the reproduction's answer to the paper's
+  KernelShark figures.
+* ``obs.margins``  — per-job RTA-margin accounting: measured response
+  vs the policy's analytic bound, with slack histograms and
+  worst-observed-margin summaries (soundness as a measured property).
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.margins import margin_summary, merge_margins  # noqa: F401
+from repro.obs.perfetto import (export_trace, export_sim,  # noqa: F401
+                                segments_from_json, validate_chrome_trace,
+                                write_chrome_trace)

@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gang import RTTask
 from repro.launch.sweep import ROOT, taskset_seed, uunifast
+from repro.obs.margins import merge_margins, overall
 from repro.vgang.formation import (HEURISTICS, assign_priorities,
                                    intensity_interference, singleton_vgangs,
                                    total_vgang_utilization)
@@ -130,6 +131,7 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         + ((RECLAIM_COLUMN,) if rtg_dr else ())
     accept = {h: 0 for h in columns}
     sim_accept = {h: 0 for h in columns}
+    margins: Dict[str, Dict] = {h: {} for h in columns}
     sim_n = 0
     soundness_violations = 0
     util_gain = 0.0
@@ -174,17 +176,28 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
                                            rtg_throttle=is_rtg,
                                            reclaim=is_dr)
                 horizon = cycles * max(t.period for t in tasks)
-                r = policy.simulate(horizon)
+                # accepted sets carry per-member analytic bounds into
+                # the run: measured response vs bound (DESIGN.md §12.3)
+                # rolls up into the per-cell rta_margin record, and a
+                # negative margin is a soundness violation caught here
+                bounds = policy.member_bounds() if rta_ok else None
+                if bounds and any(b is None for b in bounds.values()):
+                    bounds = None
+                r = policy.simulate(horizon, rta_bounds=bounds)
                 sim_ok = sum(r.deadline_misses.values()) == 0
                 sim_accept[h] += sim_ok
                 if rta_ok and not sim_ok:
                     soundness_violations += 1
+                if r.rta_margins:
+                    merge_margins(margins[h], r.rta_margins)
     return {
         "n_cores": n_cores, "dist": dist, "util": util, "n": n_sets,
         "accept": {h: c / n_sets for h, c in accept.items()},
         "sim_accept": ({h: c / sim_n for h, c in sim_accept.items()}
                        if sim_n else None),
         "sim_n": sim_n,
+        "rta_margin": ({h: (overall(m) if m else None)
+                        for h, m in margins.items()} if sim_n else None),
         "soundness_violations": soundness_violations,
         "mean_util_gain": round(util_gain / n_sets, 4),
         "wall_s": round(time.time() - t0, 3),
@@ -198,8 +211,8 @@ def _skipped_row(cell: Tuple) -> Dict:
     _, n_cores, dist, util = cell[:4]
     return {"n_cores": n_cores, "dist": dist, "util": util, "n": 0,
             "accept": None, "sim_accept": None, "sim_n": 0,
-            "soundness_violations": 0, "mean_util_gain": None,
-            "wall_s": None, "skipped": True}
+            "rta_margin": None, "soundness_violations": 0,
+            "mean_util_gain": None, "wall_s": None, "skipped": True}
 
 
 def _dispatch(cells: Sequence[Tuple], procs: int,
@@ -264,6 +277,19 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
     return [out[i] for i in range(len(cells))], skipped
 
 
+def _margin_headline(results: Sequence[Dict]) -> Dict:
+    """Grid-wide RTA-margin rollup for summary.json: jobs checked,
+    worst observed margin (ms), and the negative count — which must be
+    zero (a negative margin is a bound the measured run broke)."""
+    recs = [rec for r in results if r.get("rta_margin")
+            for rec in r["rta_margin"].values() if rec]
+    worsts = [m["worst_margin"] for m in recs
+              if m["worst_margin"] is not None]
+    return {"jobs": sum(m["jobs"] for m in recs),
+            "worst_margin": min(worsts) if worsts else None,
+            "negative": sum(m["negative"] for m in recs)}
+
+
 def run_grid(cores: Sequence[int] = (4, 8, 16),
              dists: Sequence[str] = ("light", "mixed", "heavy"),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
@@ -308,6 +334,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                "utils": list(utils),
                "soundness_violations": sum(r["soundness_violations"]
                                            for r in results),
+               "rta_margin": _margin_headline(results),
                "skipped_cells": len(skipped),
                "wall_s": round(time.time() - t0, 3),
                "files": []}

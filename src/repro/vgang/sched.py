@@ -27,7 +27,7 @@ from repro.core.sim import (PairwiseInterference, SimResult, Simulator,
                             no_interference)
 from repro.vgang.formation import (VirtualGang, assign_priorities,
                                    critical_member, rtg_sibling_budget)
-from repro.vgang.rta import schedulable_vgangs
+from repro.vgang.rta import schedulable_rtg_throttle, schedulable_vgangs
 
 
 def remap_members(vg: VirtualGang) -> List[RTTask]:
@@ -241,3 +241,28 @@ class VirtualGangPolicy:
     def rta(self) -> Dict[str, Dict]:
         """Vgang RTA verdicts for the formed set (vgang/rta.py)."""
         return schedulable_vgangs(self.vgangs, self.interference)
+
+    def member_bounds(self, interval: float = 1.0,
+                      blocking: float = 0.0) -> Dict[str, float]:
+        """Per-*member* analytic response-time bounds (ms) for this
+        policy's regime — the vgang-level WCRT from the pricing the
+        policy actually enforces (plain vgang RTA, or the RTG-throttle
+        duty-cycle bound with reclaim credit when armed). Every member
+        of a virtual gang completes within the vgang's WCRT (members
+        release together and the vgang retires as a unit), so the vgang
+        bound is a sound per-member bound. Feed the result to
+        ``Simulator(rta_bounds=...)`` for measured-margin accounting
+        (DESIGN.md §12.3)."""
+        if self.rtg_throttle:
+            verdicts = schedulable_rtg_throttle(
+                self.vgangs, self.interference, interval=interval,
+                blocking=blocking, reclaim=self.reclaim)
+        else:
+            verdicts = schedulable_vgangs(self.vgangs, self.interference,
+                                          blocking=blocking)
+        out: Dict[str, float] = {}
+        for vg in self.vgangs:
+            wcrt = verdicts[vg.name]["wcrt"]
+            for m in vg.members:
+                out[m.name] = wcrt
+        return out
