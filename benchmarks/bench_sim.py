@@ -236,6 +236,136 @@ def obs_overhead(horizon: float, repeats: int = 12) -> dict:
     }
 
 
+def grid_wall_clock(repeats: int = 3, reps_per_cell: int = 75) -> dict:
+    """The acceptance grid's RTA fixed-point verdict phase, scalar vs
+    batched (DESIGN.md §13): generate the full plain-column grid
+    workload (3 machine sizes x 9 utils x ``reps_per_cell`` tasksets,
+    same seeds as ``vgang.grid``), collapse every taskset to its dense
+    single-core-equivalent rows ONCE, then time the two interchangeable
+    verdict phases over the precollapsed rows —
+
+    * scalar: the per-lane Audsley loop (``core.rta._fixed_point``)
+      exactly as the scalar ``accepts`` path runs it, and
+    * batched: ``pad_rows`` + the masked vectorized kernel +
+      ``accept_bits``.
+
+    Collapse/formation are excluded from both sides: they are shared
+    scalar preprocessing, identical in either path. Best-of-``repeats``
+    (the kernel is warm after the first pass); verdicts are asserted
+    equal before timing is trusted. The end-to-end ``accepts`` numbers
+    (which include the shared scalar collapse) are recorded alongside
+    under ``end_to_end``."""
+    import random as _random
+
+    from repro.analysis import batched_rta as _bat
+    from repro.core.rta import _fixed_point
+    from repro.launch.sweep import taskset_seed
+    from repro.vgang.formation import (assign_priorities,
+                                       intensity_interference,
+                                       singleton_vgangs)
+    from repro.vgang.grid import n_tasks_for, random_vgang_taskset
+    from repro.vgang.rta import _collapse_rows
+    from repro.vgang.rta import accepts as vg_accepts
+    from repro.vgang.rta import batched_accepts as vg_batched_accepts
+
+    utils = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4, 1.6, 2.0)
+    vgang_sets, intfs, rows = [], [], []
+    for m in (4, 8, 16):
+        n_tasks = n_tasks_for(m)
+        for u in utils:
+            for k in range(reps_per_cell):
+                rng = _random.Random(taskset_seed(0, k, u))
+                tasks = random_vgang_taskset(rng, m, n_tasks, u, "mixed")
+                intf = intensity_interference(tasks, 0.5)
+                vgangs = assign_priorities(singleton_vgangs(tasks))
+                vgang_sets.append(vgangs)
+                intfs.append(intf)
+                rows.append(_collapse_rows(vgangs, intf))
+
+    def scalar_pass():
+        bits = []
+        for row in rows:
+            ok = True
+            for (_, c, p, prio) in row:
+                hp = [(pj, cj) for (_, cj, pj, prj) in row if prj > prio]
+                R = _fixed_point(c, hp, p, 10_000)
+                if R is None or R > p + 1e-12:
+                    ok = False
+            bits.append(ok)
+        return bits
+
+    def batched_pass():
+        batch = _bat.pad_rows(rows)
+        R = _bat.fixed_point(batch)
+        return _bat.accept_bits(batch, R).tolist()
+
+    assert scalar_pass() == batched_pass(), \
+        "batched fixed-point verdicts diverge from scalar"
+
+    def best_of(fn):
+        w = float("inf")
+        for _ in range(max(1, repeats)):
+            gc.collect()
+            t0 = time.perf_counter()
+            fn()
+            w = min(w, time.perf_counter() - t0)
+        return w
+
+    scalar_s = best_of(scalar_pass)
+    batched_s = best_of(batched_pass)
+    e2e_scalar = best_of(lambda: [vg_accepts(v, i)
+                                  for v, i in zip(vgang_sets, intfs)])
+    e2e_batched = best_of(lambda: vg_batched_accepts(vgang_sets, intfs))
+    return {
+        "workload": "vgang grid, plain column, 3 machine sizes x "
+                    f"{len(utils)} utils x {reps_per_cell} tasksets",
+        "n_tasksets": len(rows),
+        "n_lanes": sum(len(r) for r in rows),
+        "repeats": max(1, repeats),
+        "scalar_ms": round(1e3 * scalar_s, 2),
+        "batched_ms": round(1e3 * batched_s, 2),
+        "speedup_vs_scalar": round(scalar_s / batched_s, 2),
+        "end_to_end": {
+            "scalar_accepts_ms": round(1e3 * e2e_scalar, 2),
+            "batched_accepts_ms": round(1e3 * e2e_batched, 2),
+            "speedup": round(e2e_scalar / e2e_batched, 2),
+        },
+    }
+
+
+def trace_modes(horizon: float) -> dict:
+    """Both engines with tracing on vs off (``Simulator(trace=False)``):
+    asserts the SimResult payloads (everything but the timeline itself)
+    are byte-identical, and records the trace-off walls — the mode the
+    grid/sweep Monte-Carlo sim-checks run in."""
+    out = {"horizon_ms": horizon, "rows": []}
+    for workload in ("fig5_4c", "cores16"):
+        n, rts, bes, intf = WORKLOADS[workload]()
+        for dt in (None, 0.05):
+            walls = {}
+            payload = {}
+            for tr in (True, False):
+                sim = Simulator(n, rts, be_tasks=bes, interference=intf,
+                                rt_gang_enabled=True, dt=dt,
+                                throttle_mode="reactive", trace=tr)
+                t0 = time.perf_counter()
+                r = sim.run(horizon)
+                walls[tr] = time.perf_counter() - t0
+                d = dataclasses.asdict(r)
+                d.pop("trace")
+                payload[tr] = json.dumps(d, sort_keys=True, default=repr)
+            assert payload[True] == payload[False], \
+                f"{workload} dt={dt}: trace=False changed the SimResult"
+            out["rows"].append({
+                "workload": workload,
+                "engine": "event" if dt is None else "quantum",
+                "trace_on_wall_s": round(walls[True], 4),
+                "trace_off_wall_s": round(walls[False], 4),
+                "identical_result": True,
+            })
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -265,12 +395,21 @@ def main():
     oh = obs_overhead(2000.0)
     print(json.dumps(oh))
 
+    # the analysis fast path (DESIGN.md §13): grid RTA verdict phase
+    # scalar vs batched, and trace-on vs trace-off parity + walls
+    gw = grid_wall_clock()
+    print(json.dumps(gw))
+    tm = trace_modes(h16)
+    print(json.dumps(tm))
+
     out = {
         "bench": "sim_engines",
         "taskset": "fig5_synthetic (2 RT gangs + 2 BE, reactive throttle)",
         "rows": rows,
         "rows_16c": [row16],
         "obs_overhead": oh,
+        "grid_wall_clock": gw,
+        "trace_modes": tm,
     }
     if args.profile:
         out["profile"] = profile_event_loop("cores16", h16)
@@ -312,6 +451,8 @@ def main():
             f"negative RTA margin at {r['workload']}/{r['horizon_ms']}ms"
     assert oh["metrics_events_per_sec"] >= 0.95 * oh["bare_events_per_sec"], \
         f"metrics overhead {oh['overhead_frac']:.1%} exceeds 5% events/s"
+    assert gw["speedup_vs_scalar"] >= 5.0, \
+        f"batched RTA {gw['speedup_vs_scalar']}x below the 5x floor"
     print(f"OK: {last['speedup']}x at {last['horizon_ms']}ms "
           f"({last['events_per_sec']} events/s); 16c: "
           f"{row16['events_per_sec']} events/s; obs overhead "

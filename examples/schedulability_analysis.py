@@ -8,6 +8,11 @@ including the co-scheduling counterfactual that RTA cannot certify.
 --sweep additionally runs a small Monte-Carlo schedulability sweep (random
 gang tasksets per utilization level, event-driven engine fanned across
 processes; see repro.launch.sweep --schedulability for the full version).
+The sweep's RTA verdicts run on the batched vectorized kernel
+(repro.analysis.batched_rta, DESIGN.md §13) and its sims are
+trace-free — both bit-identical to the scalar/traced path, which stays
+reachable via ``repro.launch.sweep --schedulability --scalar-rta`` (and
+``repro.vgang.grid --scalar-rta`` for the acceptance grid).
 
 --vgang plots the virtual-gang acceptance-ratio curves from
 results/vgang/*.json (produce them with ``python -m repro.vgang.grid``):

@@ -112,6 +112,7 @@ class EventEngine:
         sim = self.sim
         n = sim.n_cores
         sched, reg, trace, mm = sim.sched, sim.reg, sim.trace, sim.mm
+        record = trace.record       # hot: bound once (no-op for NullTrace)
         tasks = list(sim.rt_tasks)
         order = {t.uid: i for i, t in enumerate(tasks)}
         threads: Dict[Tuple[int, int], Thread] = {
@@ -195,11 +196,11 @@ class EventEngine:
             if th is not None:
                 j = tstate[th.task.uid].active
                 if j is None:        # drained; idle until rescheduled
-                    trace.record(c, None, t0, t)
+                    record(c, None, t0, t)
                     slack += t - t0
                 elif rt_stalled[c]:
                     # paused mid-job: no progress, no traffic
-                    trace.record(c, stall_label[c] or
+                    record(c, stall_label[c] or
                                  "throttled:" + th.task.name, t0, t)
                 else:
                     if j.start is None:
@@ -209,7 +210,7 @@ class EventEngine:
                     r = mm.rates[c]
                     if r > 0.0:
                         reg.charge_span(c, r, t0, t)
-                    trace.record(c, th.task.name, t0, t)
+                    record(c, th.task.name, t0, t)
             elif fm.dem_thread(c) is not None:
                 # demoted residual (faults.py): drains on the free core
                 # ahead of BE fillers, charging its own traffic, under
@@ -217,7 +218,7 @@ class EventEngine:
                 dth = fm.dem_thread(c)
                 d = fm.dem_head(c)
                 if rt_stalled[c]:
-                    trace.record(c, stall_label[c] or
+                    record(c, stall_label[c] or
                                  "throttled:" + dth.task.name, t0, t)
                 else:
                     d.residual[c] = max(0.0,
@@ -225,7 +226,7 @@ class EventEngine:
                     r = mm.rates[c]
                     if r > 0.0:
                         reg.charge_span(c, r, t0, t)
-                    trace.record(c, "dem:" + dth.task.name, t0, t)
+                    record(c, "dem:" + dth.task.name, t0, t)
             else:
                 slack += t - t0
                 if mm.kind[c] == BE:
@@ -233,21 +234,21 @@ class EventEngine:
                     k = len(cands)
                     if k == 1:
                         be_progress[cands[0].name] += t - t0
-                        trace.record(c, cands[0].name, t0, t)
+                        record(c, cands[0].name, t0, t)
                     else:
                         sub = (t - t0) / k
                         for i, b in enumerate(cands):
                             be_progress[b.name] += sub
-                            trace.record(c, b.name, t0 + i * sub,
+                            record(c, b.name, t0 + i * sub,
                                          t0 + (i + 1) * sub)
                     r = mm.rates[c]
                     if r > 0.0:
                         reg.charge_span(c, r, t0, t)
                 elif be_cands[c]:    # idle-with-candidates == stalled
-                    trace.record(c, stall_label[c] or
+                    record(c, stall_label[c] or
                                  "throttled:" + be_cands[c][0].name, t0, t)
                 else:
-                    trace.record(c, None, t0, t)
+                    record(c, None, t0, t)
             if profile:
                 phase_wall["advance"] += perf() - t_p
 

@@ -35,31 +35,48 @@ def gang_wcet(task: RTTask) -> float:
     return task.wcet
 
 
-def response_time(task: RTTask, taskset: Sequence[RTTask],
-                  blocking: float = 0.0, crpd: float = 0.0,
-                  max_iter: int = 10_000) -> Optional[float]:
-    """Fixed-point RTA; returns None if divergent (> 1000 periods)."""
-    C = gang_wcet(task) + crpd
-    hp = [t for t in taskset if t.prio > task.prio]
-    R = C + blocking
+def _fixed_point(base: float, hp_terms, period: float,
+                 max_iter: int) -> Optional[float]:
+    """The Audsley iteration on precomputed ``(P_j, C_j + crpd)`` terms.
+    ``gang_wcet(t) + crpd`` is loop-invariant, so hoisting it out of the
+    iteration (and the hp scan out of the taskset loop in
+    ``schedulable``) cannot change a bit: the same floats are summed in
+    the same order."""
+    R = base
+    cutoff = 1000 * period
     for _ in range(max_iter):
-        interference = sum(math.ceil(R / t.period) * (gang_wcet(t) + crpd)
-                           for t in hp)
-        R_new = C + blocking + interference
+        interference = sum(math.ceil(R / p) * c for p, c in hp_terms)
+        R_new = base + interference
         if abs(R_new - R) < 1e-12:
             return R_new
-        if R_new > 1000 * task.period:
+        if R_new > cutoff:
             return None
         R = R_new
     return None
 
 
+def response_time(task: RTTask, taskset: Sequence[RTTask],
+                  blocking: float = 0.0, crpd: float = 0.0,
+                  max_iter: int = 10_000) -> Optional[float]:
+    """Fixed-point RTA; returns None if divergent (> 1000 periods)."""
+    C = gang_wcet(task) + crpd
+    hp_terms = [(t.period, gang_wcet(t) + crpd) for t in taskset
+                if t.prio > task.prio]
+    return _fixed_point(C + blocking, hp_terms, task.period, max_iter)
+
+
 def schedulable(taskset: Sequence[RTTask], blocking: float = 0.0,
                 crpd: float = 0.0) -> Dict[str, Dict]:
     """Per-task response times vs deadlines (deadline = period)."""
+    # gang_wcet memoized across the taskset and hp terms hoisted per
+    # task: one O(n) pass each instead of O(n^2) recomputes per
+    # fixed-point iteration, bit-identical results.
+    gws = [gang_wcet(t) + crpd for t in taskset]
     out = {}
-    for t in taskset:
-        R = response_time(t, taskset, blocking=blocking, crpd=crpd)
+    for t, C in zip(taskset, gws):
+        hp_terms = [(o.period, gw) for o, gw in zip(taskset, gws)
+                    if o.prio > t.prio]
+        R = _fixed_point(C + blocking, hp_terms, t.period, 10_000)
         out[t.name] = {
             "wcrt": R,
             "deadline": t.period,

@@ -24,7 +24,7 @@ from repro.core.gang import (BETask, RTTask, Thread, validate_declared,
 from repro.core.glock import GangScheduler
 from repro.core.memmodel import BE, MemoryModel
 from repro.core.throttle import BandwidthRegulator
-from repro.core.tracing import Trace
+from repro.core.tracing import NullTrace, Trace
 from repro.obs.margins import margin_summary
 from repro.obs.metrics import MetricsRegistry
 
@@ -130,7 +130,8 @@ class Simulator:
                  enforcement: Optional[Enforcement] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  rta_bounds: Optional[Dict[str, float]] = None,
-                 record_counters: bool = False):
+                 record_counters: bool = False,
+                 trace: bool = True):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
         same SimResult, O(events) instead of O(horizon/dt).
@@ -165,7 +166,14 @@ class Simulator:
         components run detached instruments, the bare mode).
         ``rta_bounds`` maps task name -> analytic response-time bound
         (ms); every completed job's margin against it is summarized in
-        ``SimResult.rta_margins``. ``record_counters`` keeps the
+        ``SimResult.rta_margins``.
+
+        ``trace=False`` skips timeline recording entirely (a no-op
+        NullTrace): identical SimResult counters, misses, percentiles
+        and margins, but ``result.trace`` stays empty — the analysis
+        fast path for Monte-Carlo sim-checks (DESIGN.md §13.4).
+
+        ``record_counters`` keeps the
         regulator's per-window history and the gang-change log for
         Perfetto counter tracks (obs.perfetto.export_sim)."""
         validate_taskset(rt_tasks)
@@ -196,7 +204,10 @@ class Simulator:
                                       metrics=mreg,
                                       record_history=record_counters)
         self.mm = MemoryModel(n_cores, interference, self.reg)
-        self.trace = Trace(n_cores)
+        # trace=False swaps in a no-op recorder: Segment construction is
+        # the top allocator on the hot path and Monte-Carlo sim-checks
+        # never read the timeline (DESIGN.md §13.4)
+        self.trace = Trace(n_cores) if trace else NullTrace(n_cores)
         self.profile = False        # event engine: record phase breakdown
         # per-core best-effort fair-share tables, shared by both engines
         # (candidates, their names, and the aggregate sum(mem_rate)/n

@@ -152,18 +152,50 @@ def _sched_level(args: Tuple[int, int, int, float, float, int, int]
     import cost amortized over the shard, not paid per taskset).
     Per-taskset seeds use ``taskset_seed`` with the absolute index, so
     results are identical for any sharding. Aggregation stays in the
-    parent."""
-    seed, n_cores, n_tasks, total_util, cycles, k0, k1 = args
-    return [_sched_cell(taskset_seed(seed, k, total_util),
-                        n_cores, n_tasks, total_util, cycles)
-            for k in range(k0, k1)]
+    parent.
+
+    The shard's RTA verdicts run through the batched kernel
+    (``analysis.batched_rta``, DESIGN.md §13) in one call — bit-identical
+    to the scalar per-taskset ``schedulable`` loop, which stays
+    reachable via the ``scalar_rta`` shard flag (``--scalar-rta``).
+    Sims run trace-free: the sweep only reads SimResult counters."""
+    from repro.core.rta import schedulable
+    from repro.core.sim import Simulator
+
+    seed, n_cores, n_tasks, total_util, cycles, k0, k1, *rest = args
+    scalar_rta = bool(rest[0]) if rest else False
+    seeds = [taskset_seed(seed, k, total_util) for k in range(k0, k1)]
+    # each taskset gets its own rng seeded from the absolute index, so
+    # drawing the whole shard up front cannot perturb the streams
+    tasksets = [random_gang_taskset(random.Random(s), n_cores, n_tasks,
+                                    total_util) for s in seeds]
+    if scalar_rta:
+        rta_bits = [all(v["ok"] for v in schedulable(ts).values())
+                    for ts in tasksets]
+    else:
+        from repro.analysis.batched_rta import batched_accepts
+        rta_bits = batched_accepts(tasksets)
+    out = []
+    for s, tasks, rta_ok in zip(seeds, tasksets, rta_bits):
+        horizon = cycles * max(t.period for t in tasks)
+        t0 = time.time()
+        r = Simulator(n_cores, tasks, dt=None, trace=False).run(horizon)
+        out.append({
+            "seed": s,
+            "util": total_util,
+            "sim_ok": sum(r.deadline_misses.values()) == 0,
+            "rta_ok": rta_ok,
+            "events": r.events,
+            "wall_s": time.time() - t0,
+        })
+    return out
 
 
 def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
                          utils: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
                          n_per_util: int = 100, cycles: float = 20.0,
                          processes: Optional[int] = None,
-                         seed: int = 0) -> Dict:
+                         seed: int = 0, scalar_rta: bool = False) -> Dict:
     """Run ``n_per_util`` random tasksets per utilization level in
     batched shard workers (a few shards per level — enough to use every
     core, orders of magnitude fewer process tasks than one per taskset),
@@ -173,7 +205,7 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
     shards_per_level = min(shards_per_level, n_per_util)
     step = -(-n_per_util // shards_per_level)
     levels = [(seed, n_cores, n_tasks, u, cycles, k0,
-               min(k0 + step, n_per_util))
+               min(k0 + step, n_per_util), scalar_rta)
               for u in utils for k0 in range(0, n_per_util, step)]
     procs = min(procs, len(levels))
     if procs > 1:
@@ -183,8 +215,8 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
         shards = [_sched_level(lv) for lv in levels]
 
     by_util: Dict[float, List[Dict]] = {u: [] for u in utils}
-    for (s, _, _, u, _, _, _), rs in zip(levels, shards):
-        by_util[u].extend(rs)
+    for lv, rs in zip(levels, shards):
+        by_util[lv[3]].extend(rs)
     rows = []
     for u in utils:
         rs = by_util[u]
@@ -204,7 +236,8 @@ def run_schedulability(args) -> None:
     utils = tuple(float(u) for u in args.utils.split(","))
     out = schedulability_sweep(
         n_cores=args.cores, n_tasks=args.tasks, utils=utils,
-        n_per_util=args.n, processes=args.procs or None, seed=args.seed)
+        n_per_util=args.n, processes=args.procs or None, seed=args.seed,
+        scalar_rta=getattr(args, "scalar_rta", False))
     for row in out["rows"]:
         print(f"util={row['util']:.2f} sim={row['sim_sched_ratio']:.2f} "
               f"rta={row['rta_sched_ratio']:.2f} n={row['n']} "
@@ -230,6 +263,9 @@ def main():
     ap.add_argument("--cores", type=int, default=4)
     ap.add_argument("--procs", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scalar-rta", action="store_true",
+                    help="per-taskset scalar RTA instead of the batched "
+                         "kernel (same verdicts, for benchmarking)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 

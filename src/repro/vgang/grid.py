@@ -61,7 +61,8 @@ from repro.obs.margins import merge_margins, overall
 from repro.vgang.formation import (HEURISTICS, assign_priorities,
                                    intensity_interference, singleton_vgangs,
                                    total_vgang_utilization)
-from repro.vgang.rta import accepts, accepts_rtg_throttle
+from repro.vgang.rta import (accepts, accepts_rtg_throttle, batched_accepts,
+                             batched_accepts_rtg_throttle)
 from repro.vgang.sched import VirtualGangPolicy
 
 # RTG-throttle policy column: interference-aware formation dispatched
@@ -124,12 +125,23 @@ def n_tasks_for(n_cores: int) -> int:
 def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
                            bool, int, float, float]) -> Dict:
     """Pool worker: one (cores, dist, util) cell — all n tasksets, all
-    heuristics, in one process (batched, as in sweep._sched_level)."""
+    heuristics, in one process.
+
+    Three phases (DESIGN.md §13.3): (1) draw + form every taskset (the
+    per-taskset rng streams are seeded by ``taskset_seed``, so the
+    restructure cannot perturb them); (2) one shard-batched RTA call
+    per policy column over all n tasksets at once
+    (``batched_accepts`` / ``batched_accepts_rtg_throttle``,
+    bit-identical to the scalar loop — ``scalar_rta`` in the cell tuple
+    keeps the old per-taskset loop reachable for benchmarking); (3) the
+    first ``sim_check`` tasksets get event-engine sim-checks with
+    ``trace=False`` — their verdicts come from the batched arrays, and
+    the SimResult counters are trace-independent."""
     (seed, n_cores, dist, util, n_sets, heuristics, rtg, rtg_dr,
-     sim_check, gamma, cycles) = args
+     sim_check, gamma, cycles, *rest) = args
+    scalar_rta = bool(rest[0]) if rest else False
     columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ()) \
         + ((RECLAIM_COLUMN,) if rtg_dr else ())
-    accept = {h: 0 for h in columns}
     sim_accept = {h: 0 for h in columns}
     margins: Dict[str, Dict] = {h: {} for h in columns}
     sim_n = 0
@@ -137,6 +149,8 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
     util_gain = 0.0
     t0 = time.time()
     n_tasks = n_tasks_for(n_cores)
+    # ---- phase 1: draw + form all n tasksets ------------------------
+    drawn: List[Tuple[List[RTTask], object, Dict[str, list]]] = []
     for k in range(n_sets):
         rng = random.Random(taskset_seed(seed, k, util))
         tasks = random_vgang_taskset(rng, n_cores, n_tasks, util, dist)
@@ -144,9 +158,6 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         formed = {"rtgang": singleton_vgangs(tasks)}
         for h in heuristics:
             formed[h] = HEURISTICS[h](tasks, n_cores, intf)
-        check_sim = k < sim_check
-        if check_sim:
-            sim_n += 1
         if rtg or rtg_dr:
             packed = formed.get("intfaware") or \
                 HEURISTICS["intfaware"](tasks, n_cores, intf)
@@ -158,38 +169,70 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         best_util = min(total_vgang_utilization(formed[h], intf)
                         for h in formed)
         util_gain += base_util - best_util
-        for h, vgangs in formed.items():
-            vgangs = assign_priorities(vgangs)
-            # one-gang-at-a-time: only same-vgang members ever co-run, so
-            # intf only enters through each vgang's inflated WCET (and
-            # inflates nothing for the rtgang singleton baseline); the
-            # rtgT column prices sibling regulation on top of that, and
-            # rtgT+dr the reclaiming dispatch (min(static, reclaim))
+        # assign priorities once per distinct formation (rtgT and
+        # rtgT+dr share the packed intfaware formation — sharing the
+        # *assigned* vgang objects too lets the rtgT columns' static
+        # per-window bounds memoize across the two columns, which key
+        # on vgang identity)
+        assigned_of: Dict[int, list] = {}
+        for h, v in formed.items():
+            if id(v) not in assigned_of:
+                assigned_of[id(v)] = assign_priorities(v)
+            formed[h] = assigned_of[id(v)]
+        drawn.append((tasks, intf, formed))
+    # ---- phase 2: one shard-batched RTA call per policy column ------
+    # one-gang-at-a-time: only same-vgang members ever co-run, so intf
+    # only enters through each vgang's inflated WCET (and inflates
+    # nothing for the rtgang singleton baseline); the rtgT column
+    # prices sibling regulation on top of that, and rtgT+dr the
+    # reclaiming dispatch (min(static, reclaim))
+    t_rta = time.time()
+    intfs = [d[1] for d in drawn]
+    wcet_cache: Dict = {}
+    verdicts: Dict[str, List[bool]] = {}
+    for h in columns:
+        vsets = [d[2][h] for d in drawn]
+        is_rtg = h in (RTG_COLUMN, RECLAIM_COLUMN)
+        is_dr = h == RECLAIM_COLUMN
+        if scalar_rta:
+            verdicts[h] = [
+                accepts_rtg_throttle(v, i, reclaim=is_dr) if is_rtg
+                else accepts(v, i) for v, i in zip(vsets, intfs)]
+        elif is_rtg:
+            verdicts[h] = batched_accepts_rtg_throttle(
+                vsets, intfs, reclaim=is_dr, wcet_cache=wcet_cache)
+        else:
+            verdicts[h] = batched_accepts(vsets, intfs)
+    accept = {h: sum(verdicts[h]) for h in columns}
+    wall_rta = time.time() - t_rta
+    # ---- phase 3: event-engine sim-checks (trace=False) -------------
+    for k in range(min(sim_check, n_sets)):
+        sim_n += 1
+        tasks, intf, formed = drawn[k]
+        for h in columns:
+            vgangs = formed[h]
             is_rtg = h in (RTG_COLUMN, RECLAIM_COLUMN)
             is_dr = h == RECLAIM_COLUMN
-            rta_ok = accepts_rtg_throttle(vgangs, intf, reclaim=is_dr) \
-                if is_rtg else accepts(vgangs, intf)
-            accept[h] += rta_ok
-            if check_sim:
-                policy = VirtualGangPolicy(vgangs, n_cores, intf,
-                                           auto_prio=False,
-                                           rtg_throttle=is_rtg,
-                                           reclaim=is_dr)
-                horizon = cycles * max(t.period for t in tasks)
-                # accepted sets carry per-member analytic bounds into
-                # the run: measured response vs bound (DESIGN.md §12.3)
-                # rolls up into the per-cell rta_margin record, and a
-                # negative margin is a soundness violation caught here
-                bounds = policy.member_bounds() if rta_ok else None
-                if bounds and any(b is None for b in bounds.values()):
-                    bounds = None
-                r = policy.simulate(horizon, rta_bounds=bounds)
-                sim_ok = sum(r.deadline_misses.values()) == 0
-                sim_accept[h] += sim_ok
-                if rta_ok and not sim_ok:
-                    soundness_violations += 1
-                if r.rta_margins:
-                    merge_margins(margins[h], r.rta_margins)
+            rta_ok = verdicts[h][k]
+            policy = VirtualGangPolicy(vgangs, n_cores, intf,
+                                       auto_prio=False,
+                                       rtg_throttle=is_rtg,
+                                       reclaim=is_dr)
+            horizon = cycles * max(t.period for t in tasks)
+            # accepted sets carry per-member analytic bounds into
+            # the run: measured response vs bound (DESIGN.md §12.3)
+            # rolls up into the per-cell rta_margin record, and a
+            # negative margin is a soundness violation caught here
+            bounds = policy.member_bounds() if rta_ok else None
+            if bounds and any(b is None for b in bounds.values()):
+                bounds = None
+            r = policy.simulate(horizon, rta_bounds=bounds, trace=False)
+            sim_ok = sum(r.deadline_misses.values()) == 0
+            sim_accept[h] += sim_ok
+            if rta_ok and not sim_ok:
+                soundness_violations += 1
+            if r.rta_margins:
+                merge_margins(margins[h], r.rta_margins)
     return {
         "n_cores": n_cores, "dist": dist, "util": util, "n": n_sets,
         "accept": {h: c / n_sets for h, c in accept.items()},
@@ -201,6 +244,7 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
         "soundness_violations": soundness_violations,
         "mean_util_gain": round(util_gain / n_sets, 4),
         "wall_s": round(time.time() - t0, 3),
+        "wall_rta_s": round(wall_rta, 4),
     }
 
 
@@ -212,7 +256,8 @@ def _skipped_row(cell: Tuple) -> Dict:
     return {"n_cores": n_cores, "dist": dist, "util": util, "n": 0,
             "accept": None, "sim_accept": None, "sim_n": 0,
             "rta_margin": None, "soundness_violations": 0,
-            "mean_util_gain": None, "wall_s": None, "skipped": True}
+            "mean_util_gain": None, "wall_s": None, "wall_rta_s": None,
+            "skipped": True}
 
 
 def _dispatch(cells: Sequence[Tuple], procs: int,
@@ -226,24 +271,32 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
     cannot be enforced preemptively, so only the raise-retry applies."""
     out: Dict[int, Dict] = {}
     todo = list(range(len(cells)))
-    for attempt in (0, 1):
-        if not todo:
-            break
-        failed: List[int] = []
-        if procs > 1:
-            # fresh pool per round: terminating it reaps workers stuck
-            # on timed-out cells, so retries start clean
-            pool = multiprocessing.Pool(min(procs, len(todo)))
-            try:
+    pool = None
+    try:
+        for attempt in (0, 1):
+            if not todo:
+                break
+            failed: List[int] = []
+            if procs > 1:
+                # the pool is reused across retry rounds; it is only
+                # torn down and rebuilt when a cell *timed out* — a
+                # timed-out worker is still running and must be reaped
+                # (terminate), whereas a raising worker returned
+                # normally and its process is fine to reuse
+                timed_out = False
+                if pool is None:
+                    pool = multiprocessing.Pool(min(procs, len(todo)))
                 asyncs = [(i, pool.apply_async(worker, (cells[i],)))
                           for i in todo]
                 for i, a in asyncs:
                     try:
                         out[i] = a.get(cell_timeout)
                     except Exception as e:
+                        is_to = isinstance(e, multiprocessing.TimeoutError)
+                        timed_out = timed_out or is_to
                         print(f"grid: cell {cells[i][1]}c/"
                               f"{cells[i][2]}/u={cells[i][3]} "
-                              f"{'timed out' if isinstance(e, multiprocessing.TimeoutError) else f'failed ({e!r})'}"
+                              f"{'timed out' if is_to else f'failed ({e!r})'}"
                               f" (attempt {attempt + 1})",
                               file=sys.stderr)
                         failed.append(i)
@@ -256,19 +309,24 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
                             failed.remove(i)
                         except Exception:
                             pass
-            finally:
-                pool.terminate()
-                pool.join()
-        else:
-            for i in todo:
-                try:
-                    out[i] = worker(cells[i])
-                except Exception as e:
-                    print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/"
-                          f"u={cells[i][3]} failed ({e!r}) "
-                          f"(attempt {attempt + 1})", file=sys.stderr)
-                    failed.append(i)
-        todo = failed
+                if timed_out:
+                    pool.terminate()
+                    pool.join()
+                    pool = None
+            else:
+                for i in todo:
+                    try:
+                        out[i] = worker(cells[i])
+                    except Exception as e:
+                        print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/"
+                              f"u={cells[i][3]} failed ({e!r}) "
+                              f"(attempt {attempt + 1})", file=sys.stderr)
+                        failed.append(i)
+            todo = failed
+    finally:
+        if pool is not None:
+            pool.terminate()
+            pool.join()
     skipped = [cells[i] for i in todo]
     for i in todo:
         out[i] = _skipped_row(cells[i])
@@ -301,6 +359,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              processes: Optional[int] = None,
              out_dir: str = OUT_DEFAULT,
              cell_timeout: Optional[float] = None,
+             scalar_rta: bool = False,
              worker=_grid_cell) -> Dict:
     """Run the full grid; one batched worker per (cores, dist, util)
     cell; aggregate and write per-(cores, dist) curve files + summary."""
@@ -319,7 +378,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                          f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}, "
                          f"{RECLAIM_COLUMN}")
     cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), rtg, rtg_dr,
-              sim_check, gamma, cycles)
+              sim_check, gamma, cycles, scalar_rta)
              for m in cores for d in dists for u in utils]
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
     procs = max(1, min(procs, len(cells)))
@@ -391,6 +450,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--cell-timeout", type=float, default=0.0,
                     help="per-cell wall-clock timeout in seconds (one "
                          "retry, then the cell is skipped); 0 = none")
+    ap.add_argument("--scalar-rta", action="store_true",
+                    help="per-taskset scalar RTA loop instead of the "
+                         "shard-batched kernel (DESIGN.md §13) — same "
+                         "verdicts bit-for-bit, for benchmarking")
     ap.add_argument("--out", default=OUT_DEFAULT)
     args = ap.parse_args(argv)
 
@@ -408,7 +471,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         n_per_cell=args.n, sim_check=args.sim_check, gamma=args.gamma,
         cycles=args.cycles, seed=args.seed,
         processes=args.procs or None, out_dir=args.out,
-        cell_timeout=args.cell_timeout or None)
+        cell_timeout=args.cell_timeout or None,
+        scalar_rta=args.scalar_rta)
     print_curves(out["results"])
     s = out["summary"]
     print(f"\nwrote {len(s['files'])} curve files + summary to "

@@ -517,3 +517,208 @@ def accepts_rtg_throttle(
                                    interval=interval, blocking=blocking,
                                    reclaim=reclaim)
     return all(v["ok"] for v in res.values())
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points (analysis fast path, DESIGN.md §13)
+#
+# The single-core-equivalent collapse makes each formed set a dense row of
+# (C_v, P_v, prio_v), so a shard of formed sets maps straight onto the
+# masked batched fixed point in analysis/batched_rta.py.  Each wrapper is a
+# drop-in for mapping its scalar counterpart over the shard: same
+# validation errors (raised for the first offending set, in shard order),
+# same result dicts, bit-identical WCRTs and accept bits.
+
+
+def _collapse_rows(vgangs: Sequence[VirtualGang],
+                   interference: PairwiseInterference
+                   ) -> List[Tuple[str, float, float, float]]:
+    """(name, C_v, P_v, prio_v) rows for one formed set, with the same
+    distinct-priority validation as vgang_taskset (the RTTask
+    construction itself is bypassed: gang_wcet of an equivalent task is
+    its plain wcet, so the collapse value feeds the kernel directly)."""
+    prios = [vg.prio for vg in vgangs]
+    if len(set(prios)) != len(prios):
+        raise ValueError(
+            "virtual gangs must carry distinct priorities before RTA — "
+            "run formation output through formation.assign_priorities()")
+    return [(vg.name, vg.inflated_wcet(interference), vg.period,
+             float(vg.prio)) for vg in vgangs]
+
+
+def _per_set_interference(vgang_sets, interferences):
+    if callable(interferences):
+        return [interferences] * len(vgang_sets)
+    if len(interferences) != len(vgang_sets):
+        raise ValueError("need one interference model per vgang set")
+    return list(interferences)
+
+
+def batched_schedulable_vgangs(
+        vgang_sets: Sequence[Sequence[VirtualGang]],
+        interferences=no_interference,
+        blocking: float = 0.0, crpd: float = 0.0,
+        backend: str = "auto") -> List[Dict[str, Dict]]:
+    """Shard-batched ``schedulable_vgangs``: one result dict per formed
+    set, bit-identical to the scalar loop.  ``interferences`` is a single
+    model shared by every set or one model per set."""
+    from repro.analysis import batched_rta as _bat
+
+    intfs = _per_set_interference(vgang_sets, interferences)
+    rows = [_collapse_rows(vgs, intf)
+            for vgs, intf in zip(vgang_sets, intfs)]
+    batch = _bat.pad_rows(rows)
+    R = _bat.fixed_point(batch, blocking=blocking, crpd=crpd,
+                         backend=backend)
+    out: List[Dict[str, Dict]] = []
+    for s, vgs in enumerate(vgang_sets):
+        res = {}
+        for i, vg in enumerate(vgs):
+            wcrt = None if R[s, i] != R[s, i] else float(R[s, i])
+            res[vg.name] = {"wcrt": wcrt, "deadline": vg.period,
+                            "ok": wcrt is not None
+                            and wcrt <= vg.period + 1e-12}
+        out.append(res)
+    return out
+
+
+def batched_accepts(vgang_sets: Sequence[Sequence[VirtualGang]],
+                    interferences=no_interference,
+                    blocking: float = 0.0, crpd: float = 0.0,
+                    backend: str = "auto") -> List[bool]:
+    """Shard-batched ``accepts``: one admission bit per formed set.
+    Skips the per-task result dicts entirely — the bits come straight
+    off the kernel's WCRT array."""
+    from repro.analysis import batched_rta as _bat
+
+    intfs = _per_set_interference(vgang_sets, interferences)
+    rows = [_collapse_rows(vgs, intf)
+            for vgs, intf in zip(vgang_sets, intfs)]
+    batch = _bat.pad_rows(rows)
+    R = _bat.fixed_point(batch, blocking=blocking, crpd=crpd,
+                         backend=backend)
+    return _bat.accept_bits(batch, R).tolist()
+
+
+def _rtg_static_bounds(vg: VirtualGang, interference: PairwiseInterference,
+                       interval: float, cache: Optional[dict]
+                       ) -> Tuple[float, bool]:
+    """(rtg_throttle_wcet, stall_prone) for one vgang, memoized so the
+    rtgT and rtgT+dr columns of a grid cell price each vgang once.  The
+    cache key retains the (vg, interference) objects, so id() reuse
+    after garbage collection cannot alias entries."""
+    if cache is None:
+        return (rtg_throttle_wcet(vg, interference, interval),
+                _stall_prone(vg, interference, interval))
+    key = (id(vg), id(interference), interval)
+    hit = cache.get(key)
+    if hit is None:
+        hit = (vg, interference,
+               rtg_throttle_wcet(vg, interference, interval),
+               _stall_prone(vg, interference, interval))
+        cache[key] = hit
+    return hit[2], hit[3]
+
+
+def batched_schedulable_rtg_throttle(
+        vgang_sets: Sequence[Sequence[VirtualGang]],
+        interferences=no_interference,
+        interval: float = 1.0, blocking: float = 0.0,
+        reclaim: bool = False, backend: str = "auto",
+        wcet_cache: Optional[dict] = None) -> List[Dict[str, Dict]]:
+    """Shard-batched ``schedulable_rtg_throttle``.
+
+    The per-window WCET bounds (``rtg_throttle_wcet`` /
+    ``reclaim_wcet``) stay scalar — they are per-vgang closed forms, not
+    fixed points — while every set's Audsley iteration runs in the
+    batched kernel with per-analyzed-lane ``crpd`` (the stall-prone
+    realignment surcharge).  Infinite-WCET vgangs are excluded from
+    analysis but still interfere, exactly like the scalar skip."""
+    import numpy as _np
+
+    from repro.analysis import batched_rta as _bat
+
+    intfs = _per_set_interference(vgang_sets, interferences)
+    rows, crpd_rows = _rtg_rows(vgang_sets, intfs, interval, reclaim,
+                                wcet_cache)
+    batch = _bat.pad_rows(rows)
+    S, T = batch.shape
+    crpd = _np.zeros((S, T))
+    for s, cr in enumerate(crpd_rows):
+        crpd[s, :len(cr)] = cr
+    R = _bat.fixed_point(batch, blocking=blocking, crpd=crpd,
+                         backend=backend)
+    out: List[Dict[str, Dict]] = []
+    for s, vgs in enumerate(vgang_sets):
+        res = {}
+        for i, vg in enumerate(vgs):
+            wcrt = None if R[s, i] != R[s, i] else float(R[s, i])
+            res[vg.name] = {"wcrt": wcrt, "deadline": vg.period,
+                            "ok": wcrt is not None
+                            and wcrt <= vg.period + 1e-12}
+        out.append(res)
+    return out
+
+
+def _rtg_rows(vgang_sets, intfs, interval, reclaim, wcet_cache):
+    """Validated ``(name, C, P, prio)`` rows plus per-set crpd lists for
+    the rtgT / rtgT+dr columns, in shard order — same checks and error
+    messages as scalar ``schedulable_rtg_throttle``."""
+    rows = []
+    crpd_rows = []
+    for vgs, intf in zip(vgang_sets, intfs):
+        prios = [vg.prio for vg in vgs]
+        if len(set(prios)) != len(prios):
+            raise ValueError(
+                "virtual gangs must carry distinct priorities before RTA "
+                "— run formation output through "
+                "formation.assign_priorities()")
+        for vg in vgs:
+            ratio = vg.period / interval
+            if abs(ratio - round(ratio)) > 1e-9:
+                raise ValueError(
+                    f"RTG-throttle RTA needs window-aligned releases: "
+                    f"vgang {vg.name!r} period {vg.period} is not a "
+                    f"multiple of the regulation interval {interval}")
+            off = [m.release_offset for m in vg.members
+                   if m.release_offset != 0.0]
+            if off:
+                raise ValueError(
+                    f"RTG-throttle RTA needs zero release offsets: vgang "
+                    f"{vg.name!r} members carry offsets {off}")
+        row = []
+        crpd_row = []
+        for vg in vgs:
+            w, stall = _rtg_static_bounds(vg, intf, interval, wcet_cache)
+            if reclaim:
+                w = min(w, reclaim_wcet(vg, intf, interval))
+            row.append((vg.name, w, vg.period, float(vg.prio)))
+            crpd_row.append(interval if stall else 0.0)
+        rows.append(row)
+        crpd_rows.append(crpd_row)
+    return rows, crpd_rows
+
+
+def batched_accepts_rtg_throttle(
+        vgang_sets: Sequence[Sequence[VirtualGang]],
+        interferences=no_interference,
+        interval: float = 1.0, blocking: float = 0.0,
+        reclaim: bool = False, backend: str = "auto",
+        wcet_cache: Optional[dict] = None) -> List[bool]:
+    """Shard-batched ``accepts_rtg_throttle`` (``reclaim=True``: the
+    rtgT+dr column), bits straight off the kernel's WCRT array."""
+    import numpy as _np
+
+    from repro.analysis import batched_rta as _bat
+
+    intfs = _per_set_interference(vgang_sets, interferences)
+    rows, crpd_rows = _rtg_rows(vgang_sets, intfs, interval, reclaim,
+                                wcet_cache)
+    batch = _bat.pad_rows(rows)
+    S, T = batch.shape
+    crpd = _np.zeros((S, T))
+    for s, cr in enumerate(crpd_rows):
+        crpd[s, :len(cr)] = cr
+    R = _bat.fixed_point(batch, blocking=blocking, crpd=crpd,
+                         backend=backend)
+    return _bat.accept_bits(batch, R).tolist()

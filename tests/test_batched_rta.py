@@ -1,0 +1,207 @@
+"""Batched vectorized RTA (analysis/batched_rta.py, DESIGN.md §13):
+property tests asserting the padded masked kernel matches the scalar
+Audsley fixed point EXACTLY — same float bits for every WCRT, same
+accept bit, same divergence verdict — across ~500 seeded random
+tasksets plus the padded-lane edge cases (singleton tasksets,
+all-divergent shards, infinite-WCET interferers)."""
+import math
+import random
+
+import pytest
+
+from repro.analysis.batched_rta import (accept_bits, batched_accepts,
+                                        batched_response_times,
+                                        batched_schedulable, fixed_point,
+                                        pad_rows, pad_tasksets)
+from repro.core.gang import RTTask
+from repro.core.rta import response_time, schedulable
+from repro.launch.sweep import random_gang_taskset, taskset_seed
+from repro.vgang.formation import (assign_priorities,
+                                   intensity_interference,
+                                   singleton_vgangs)
+from repro.vgang.grid import n_tasks_for, random_vgang_taskset
+from repro.vgang.rta import (accepts, accepts_rtg_throttle, batched_accepts
+                             as vg_batched_accepts,
+                             batched_accepts_rtg_throttle,
+                             batched_schedulable_rtg_throttle,
+                             batched_schedulable_vgangs, schedulable_rtg_throttle,
+                             schedulable_vgangs)
+from repro.vgang.formation import HEURISTICS
+
+
+def _random_tasksets(n_sets, seed=0, n_cores=4, max_tasks=8,
+                     max_util=2.2):
+    """Seeded shard: varying sizes and utilizations, so the batch mixes
+    converging, deadline-missing and divergent lanes."""
+    sets = []
+    for k in range(n_sets):
+        rng = random.Random(taskset_seed(seed, k, 1.0))
+        n = rng.randint(1, max_tasks)
+        u = rng.uniform(0.1, max_util)
+        sets.append(random_gang_taskset(rng, n_cores, n, u))
+    return sets
+
+
+def _assert_exact(tasksets, **kw):
+    got = batched_schedulable(tasksets, **kw)
+    assert len(got) == len(tasksets)
+    for ts, res in zip(tasksets, got):
+        want = schedulable(ts, **kw)
+        assert list(res) == list(want)
+        for name in want:
+            w, g = want[name], res[name]
+            assert g["ok"] == w["ok"], (name, g, w)
+            assert g["deadline"] == w["deadline"]
+            if w["wcrt"] is None:
+                assert g["wcrt"] is None, (name, g, w)
+            else:
+                # bit-for-bit, not approx: identical float
+                assert g["wcrt"] == w["wcrt"] and \
+                    math.copysign(1, g["wcrt"]) == math.copysign(1, w["wcrt"])
+
+
+def test_batched_matches_scalar_500_tasksets():
+    """The headline property: ~500 random tasksets, exact equality."""
+    sets = _random_tasksets(250, seed=0) + \
+        _random_tasksets(150, seed=1, max_tasks=12, max_util=3.0) + \
+        _random_tasksets(100, seed=2, n_cores=8, max_util=1.5)
+    _assert_exact(sets)
+
+
+def test_batched_blocking_and_crpd():
+    sets = _random_tasksets(60, seed=3)
+    _assert_exact(sets, blocking=0.7)
+    _assert_exact(sets, crpd=0.25)
+    _assert_exact(sets, blocking=0.3, crpd=0.1)
+
+
+def test_singleton_tasksets():
+    """One-task sets: no hp interference, padded lanes all masked."""
+    sets = [[RTTask("solo", wcet=w, period=10.0, cores=(0,), prio=1)]
+            for w in (0.5, 9.999999, 10.0, 10.5)]
+    _assert_exact(sets)
+
+
+def test_all_divergent_shard():
+    """Every lane diverges (hp utilization > 1): every wcrt is None,
+    every accept bit False — and the batch must not spin to max_iter."""
+    sets = []
+    for k in range(20):
+        rng = random.Random(k)
+        sets.append(random_gang_taskset(rng, 4, 6, rng.uniform(4.0, 8.0)))
+    got = batched_schedulable(sets)
+    for ts, res in zip(sets, got):
+        want = schedulable(ts)
+        for name in want:
+            assert res[name]["wcrt"] == want[name]["wcrt"]
+            assert res[name]["ok"] == want[name]["ok"]
+    # the lowest-prio lanes genuinely diverge at these utilizations
+    assert any(res[name]["wcrt"] is None
+               for res in got for name in res)
+
+
+def test_infinite_wcet_interferer():
+    """An inf-WCET task is skipped by analysis but still interferes:
+    scalar returns None for it and for everything below it."""
+    ts = [RTTask("hi", wcet=float("inf"), period=20.0, cores=(0,), prio=3),
+          RTTask("mid", wcet=1.0, period=20.0, cores=(0,), prio=2),
+          RTTask("lo", wcet=1.0, period=40.0, cores=(0,), prio=1)]
+    fine = [RTTask("a", wcet=2.0, period=10.0, cores=(0,), prio=2),
+            RTTask("b", wcet=3.0, period=30.0, cores=(0,), prio=1)]
+    _assert_exact([ts, fine])
+
+
+def test_mixed_size_padding():
+    """Sets of very different sizes in one shard: the padded columns of
+    the short sets must not leak into their verdicts."""
+    sets = [_random_tasksets(1, seed=10, max_tasks=2)[0],
+            _random_tasksets(1, seed=11, max_tasks=15, max_util=1.2)[0],
+            _random_tasksets(1, seed=12, max_tasks=1)[0]]
+    _assert_exact(sets)
+
+
+def test_batched_response_times_wrapper():
+    sets = _random_tasksets(40, seed=5)
+    wcrts = batched_response_times(sets)
+    for ts, Rs in zip(sets, wcrts):
+        for t, r in zip(ts, Rs):
+            assert r == response_time(t, ts)
+
+
+def test_accept_bits_match_schedulable():
+    sets = _random_tasksets(80, seed=6, max_util=2.5)
+    bits = batched_accepts(sets)
+    for ts, bit in zip(sets, bits):
+        assert bit == all(v["ok"] for v in schedulable(ts).values())
+
+
+def test_empty_and_degenerate_shapes():
+    assert batched_schedulable([]) == []
+    batch = pad_rows([[("x", 1.0, 10.0, 1.0)]])
+    R = fixed_point(batch)
+    assert R.shape == (1, 1) and R[0, 0] == 1.0
+    assert accept_bits(batch, R).tolist() == [True]
+
+
+# ---------------------------------------------------------------------
+# vgang batched entry points vs their scalar twins
+
+
+def _vgang_workload(n_sets, seed=0, cores=(4, 8, 16), dist="mixed"):
+    out = []
+    for k in range(n_sets):
+        m = cores[k % len(cores)]
+        rng = random.Random(taskset_seed(seed, k, 1.1))
+        tasks = random_vgang_taskset(rng, m, n_tasks_for(m),
+                                    rng.uniform(0.3, 2.0), dist)
+        intf = intensity_interference(tasks, 0.5)
+        out.append((m, tasks, intf))
+    return out
+
+
+def test_vgang_batched_accepts_matches_scalar():
+    work = _vgang_workload(60, seed=7)
+    vsets, intfs = [], []
+    for m, tasks, intf in work:
+        vsets.append(assign_priorities(singleton_vgangs(tasks)))
+        intfs.append(intf)
+    got = vg_batched_accepts(vsets, intfs)
+    want = [accepts(v, i) for v, i in zip(vsets, intfs)]
+    assert got == want
+    # dict-level too: exact wcrt equality
+    res = batched_schedulable_vgangs(vsets, intfs)
+    for v, i, r in zip(vsets, intfs, res):
+        assert r == schedulable_vgangs(v, i)
+
+
+def test_vgang_batched_rtg_throttle_matches_scalar():
+    work = _vgang_workload(40, seed=8)
+    vsets, intfs = [], []
+    for m, tasks, intf in work:
+        packed = HEURISTICS["intfaware"](tasks, m, intf)
+        vsets.append(assign_priorities(packed))
+        intfs.append(intf)
+    for reclaim in (False, True):
+        cache = {}
+        got = batched_accepts_rtg_throttle(vsets, intfs, reclaim=reclaim,
+                                           wcet_cache=cache)
+        want = [accepts_rtg_throttle(v, i, reclaim=reclaim)
+                for v, i in zip(vsets, intfs)]
+        assert got == want
+        res = batched_schedulable_rtg_throttle(vsets, intfs,
+                                               reclaim=reclaim,
+                                               wcet_cache=cache)
+        for v, i, r in zip(vsets, intfs, res):
+            assert r == schedulable_rtg_throttle(v, i, reclaim=reclaim)
+
+
+def test_jax_backend_matches_numpy():
+    jax = pytest.importorskip("jax")
+    del jax
+    sets = _random_tasksets(25, seed=9, max_util=2.0)
+    a = batched_schedulable(sets, backend="numpy")
+    b = batched_schedulable(sets, backend="jax")
+    for ra, rb in zip(a, b):
+        for name in ra:
+            assert ra[name]["wcrt"] == rb[name]["wcrt"]
+            assert ra[name]["ok"] == rb[name]["ok"]

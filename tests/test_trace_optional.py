@@ -1,0 +1,102 @@
+"""Trace-optional simulation (``Simulator(trace=False)``, DESIGN.md
+§13.4): on the fig4/fig5 parity workloads, both engines must produce a
+SimResult that is byte-for-byte identical with tracing on or off —
+counters, response times, miss times, margins and the metrics
+registry's parity snapshot all come from engine state, never from the
+timeline. The only difference trace=False may make is an empty
+timeline."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.gang import BETask, RTTask
+from repro.core.sim import Simulator, matrix_interference
+from repro.core.tracing import NullTrace, Trace
+from repro.obs.metrics import MetricsRegistry
+
+
+def fig4_taskset():
+    t1 = RTTask("tau1", wcet=2, period=10, cores=(0, 1), prio=2,
+                mem_budget=1e9)
+    t2 = RTTask("tau2", wcet=4, period=10, cores=(2, 3), prio=1,
+                mem_budget=1e9)
+    be = [BETask("tau3", cores=(0, 1, 2, 3))]
+    intf = matrix_interference({("tau1", "tau2"): 10.0})
+    return [t1, t2], be, intf
+
+
+def fig5_taskset():
+    t1 = RTTask("tau1", wcet=3.5, period=20, cores=(0, 1), prio=2,
+                mem_budget=0.1)
+    t2 = RTTask("tau2", wcet=6.5, period=30, cores=(2, 3), prio=1,
+                mem_budget=0.1)
+    bem = BETask("be_mem", cores=(0, 1, 2, 3), mem_rate=1.0)
+    bec = BETask("be_cpu", cores=(0, 1, 2, 3), mem_rate=0.01)
+    intf = matrix_interference({
+        ("tau1", "tau2"): 2.0, ("tau2", "tau1"): 2.0,
+        ("tau1", "be_mem"): 1.5, ("tau2", "be_mem"): 1.5,
+    })
+    return [t1, t2], [bem, bec], intf
+
+
+WORKLOADS = {"fig4": fig4_taskset, "fig5": fig5_taskset}
+
+
+def _run(workload, dt, trace, horizon=200.0, metrics=False):
+    rts, bes, intf = WORKLOADS[workload]()
+    reg = MetricsRegistry() if metrics else None
+    sim = Simulator(4, rts, be_tasks=bes, interference=intf,
+                    rt_gang_enabled=True, dt=dt,
+                    throttle_mode="reactive", trace=trace,
+                    record_counters=True, metrics=reg,
+                    rta_bounds={t.name: 3.0 * t.period for t in rts})
+    return sim.run(horizon)
+
+
+def _payload(r):
+    """Everything in the SimResult except the timeline itself,
+    serialized canonically for a byte-for-byte comparison."""
+    d = dataclasses.asdict(r)
+    d.pop("trace")
+    return json.dumps(d, sort_keys=True, default=repr)
+
+
+@pytest.mark.parametrize("workload", ["fig4", "fig5"])
+@pytest.mark.parametrize("dt", [None, 0.05])
+def test_trace_off_byte_identical(workload, dt):
+    on = _run(workload, dt, True, metrics=True)
+    off = _run(workload, dt, False, metrics=True)
+    assert _payload(on) == _payload(off)
+    # the pieces the grid/sweep sim-checks actually consume, spelled out
+    assert off.deadline_misses == on.deadline_misses
+    assert off.miss_times == on.miss_times
+    assert off.response_times == on.response_times
+    assert off.rta_margins == on.rta_margins
+    assert off.parity_metrics == on.parity_metrics
+    assert off.metrics == on.metrics
+    for name in on.response_times:
+        assert off.percentiles(name) == on.percentiles(name)
+    # trace=False really did skip the timeline
+    assert isinstance(off.trace, NullTrace)
+    assert off.trace.segments == [] and not off.trace._open
+    assert isinstance(on.trace, Trace) and on.trace.segments
+
+
+def test_null_trace_queries_work_on_empty_timeline():
+    tr = NullTrace(4)
+    tr.record(0, "x", 0.0, 1.0)
+    tr.finish()
+    assert tr.segments == []
+    assert tr.busy("x") == 0.0
+    assert tr.intervals("x") == []
+    assert tr.to_csv() == "core,label,t0,t1"
+    assert tr.render_ascii() == "(empty trace)"
+
+
+def test_trace_default_is_on():
+    rts, bes, intf = WORKLOADS["fig4"]()
+    sim = Simulator(4, rts, be_tasks=bes, interference=intf, dt=None)
+    r = sim.run(50.0)
+    assert isinstance(r.trace, Trace) and not isinstance(r.trace, NullTrace)
+    assert r.trace.segments
