@@ -246,32 +246,51 @@ def bounds_for(mode, policy, intf, b_ms):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--smoke", action="store_true",
-                    help="short CI run (~1.2 s per mode)")
-    ap.add_argument("--duration", type=float, default=None,
-                    help="seconds per mode (default: 12 plan periods)")
-    ap.add_argument("--margin", type=float, default=8.0,
-                    help="WCET safety factor over the calibrated quantum")
-    ap.add_argument("--jitter", type=float, default=60.0,
-                    help="dispatch-jitter allowance folded into the "
-                         "blocking term (ms of OS thread-wakeup latency "
-                         "outside the task model)")
-    ap.add_argument("--reclaim", action="store_true",
-                    help="add the rtgT+dr mode: RTG-throttle with "
-                         "mid-window bandwidth donation (DESIGN.md §7.5)")
-    ap.add_argument("--out", default=os.path.join(
-        ROOT, "BENCH_executor_vgang.json"))
-    args = ap.parse_args()
+# config fields this surface exposes as flags (DESIGN.md §14.2); the
+# aliases preserve the legacy spellings
+BENCH_EXEC_FLAG_PATHS = ("smoke", "duration_s", "margin", "jitter_ms",
+                         "policy.reclaim", "output.out")
+BENCH_EXEC_FLAG_ALIASES = {"duration_s": "--duration",
+                           "jitter_ms": "--jitter"}
+BENCH_EXEC_FLAG_HELPS = {
+    "smoke": "short CI run (~1.2 s per mode)",
+    "duration_s": "seconds per mode (default: 12 plan periods)",
+    "margin": "WCET safety factor over the calibrated quantum",
+    "jitter_ms": "dispatch-jitter allowance folded into the blocking "
+                 "term (ms of OS thread-wakeup latency outside the task "
+                 "model)",
+    "policy.reclaim": "add the rtgT+dr mode: RTG-throttle with "
+                      "mid-window bandwidth donation (DESIGN.md §7.5)",
+    "output.out": "output JSON path (default BENCH_executor_vgang.json)",
+}
 
-    tasks, steps, quanta_s, wcet_ms = build_taskset(args.margin)
+
+def resolve_bench_executor_config(argv=None):
+    from repro.experiment import (ExperimentConfig, add_flags, cli_main,
+                                  default_bench_executor_config,
+                                  derive_flags)
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    base = default_bench_executor_config()
+    flags = derive_flags(ExperimentConfig, BENCH_EXEC_FLAG_PATHS,
+                         aliases=BENCH_EXEC_FLAG_ALIASES,
+                         helps=BENCH_EXEC_FLAG_HELPS)
+    add_flags(ap, flags, base)
+    return cli_main(ap, flags, base, argv,
+                    expected_kind="bench_executor")
+
+
+def main():
+    cfg = resolve_bench_executor_config()
+    out_path = cfg.output.out or os.path.join(
+        ROOT, "BENCH_executor_vgang.json")
+
+    tasks, steps, quanta_s, wcet_ms = build_taskset(cfg.margin)
     intf = intensity_interference(tasks, gamma=GAMMA)
     # blocking B_i: one non-preemptible quantum of any other gang (we
     # use the declared WCET, which upper-bounds the measured quantum)
     # plus one best-effort filler quantum, plus the dispatch-jitter
     # allowance (OS wakeup latency is outside the task model)
-    b_ms = max(wcet_ms.values()) + 5.0 + args.jitter
+    b_ms = max(wcet_ms.values()) + 5.0 + cfg.jitter_ms
 
     formed = assign_priorities(interference_aware(tasks, N_LANES, intf))
     assert len(formed) == 3, [vg.name for vg in formed]
@@ -280,15 +299,15 @@ def main():
         "vgang": formed,
         "rtgT": formed,
     }
-    if args.reclaim:
+    if cfg.policy.reclaim:
         modes["rtgT+dr"] = formed
     plan_period_s = max(t.period for t in tasks) * 1e-3
-    duration = args.duration or max(
-        (1.2 if args.smoke else 2.5), (6 if args.smoke else 12)
+    duration = cfg.duration_s or max(
+        (1.2 if cfg.smoke else 2.5), (6 if cfg.smoke else 12)
         * plan_period_s)
 
     report = {"n_lanes": N_LANES, "interval_s": INTERVAL_S,
-              "margin": args.margin, "duration_s": duration,
+              "margin": cfg.margin, "duration_s": duration,
               "quanta_ms": {n: q * 1e3 for n, q in quanta_s.items()},
               "wcet_ms": wcet_ms, "blocking_ms": b_ms,
               "periods_ms": {t.name: t.period for t in tasks},
@@ -373,8 +392,8 @@ def main():
         "worst_margin_ms": min(worsts) if worsts else None,
         "negative": sum(m["negative"] for m in mode_margins),
     }
-    write_bench_json(args.out, report)
-    print(f"wrote {args.out}")
+    write_bench_json(out_path, report, config=cfg)
+    print(f"wrote {out_path}")
     if failures:
         print("FAILURES:")
         for msg in failures:

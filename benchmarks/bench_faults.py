@@ -21,8 +21,14 @@ if enforcement fails to contain the faults, so CI can run it as a
 smoke job. Results go to BENCH_faults.json at the repo root.
 
     PYTHONPATH=src python benchmarks/bench_faults.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_faults.py \
+        --config configs/experiments/bench_faults_smoke.json
 
---smoke shortens the simulated horizon and the executor run (CI).
+--smoke shortens the simulated horizon and the executor run (CI). The
+enforcement stack (action / factor / watchdog factor) comes from the
+resolved ExperimentConfig's policy block (DESIGN.md §14), so a config
+file can vary it; the resolved config + digest are stamped into the
+output JSON.
 """
 from __future__ import annotations
 
@@ -75,7 +81,11 @@ PLAN = FaultPlan(faults=(
     HungThread(FAULTY, job=7, thread=1),
 ), seed=42)
 
-ENF = Enforcement(action="abort", factor=1.2, watchdog_factor=2.0)
+def enforcement_from(policy) -> Enforcement:
+    """Build the runtime Enforcement stack from a PolicyStackConfig."""
+    return Enforcement(action=policy.enforcement or "abort",
+                       factor=policy.enforcement_factor,
+                       watchdog_factor=policy.watchdog_factor)
 
 
 def simulate(dt, horizon, fault_plan=None, enforcement=None,
@@ -104,7 +114,7 @@ def summarize(res, wall):
     return out
 
 
-def margin_bounds():
+def margin_bounds(enforcement):
     """Analytic bounds for the margin-instrumented runs: the fault-free
     baseline is priced by plain gang RTA over the declared WCETs; the
     enforced run by the enforcement-aware RTA
@@ -116,17 +126,17 @@ def margin_bounds():
     rts, _ = taskset()
     base = {n: v["wcrt"] for n, v in core_rta.schedulable(rts).items()}
     enf = {n: v["wcrt"] for n, v in schedulable_vgangs_enforced(
-        singleton_vgangs(rts), enforcement=ENF).items()}
+        singleton_vgangs(rts), enforcement=enforcement).items()}
     assert all(b is not None for b in base.values())
     assert all(b is not None for b in enf.values())
     return base, enf
 
 
-def run_engines(horizon):
+def run_engines(horizon, enforcement):
     out = {}
     violations = []
     margins = {}
-    base_bounds, enf_bounds = margin_bounds()
+    base_bounds, enf_bounds = margin_bounds(enforcement)
     for engine, dt in (("quantum", 0.05), ("event", None)):
         # quantum completions are stamped up to one dt late: add the
         # discretization slop to the bounds (obs/margins.py)
@@ -136,7 +146,7 @@ def run_engines(horizon):
         base, wb = simulate(dt, horizon, rta_bounds=bb)
         loose, wl = simulate(dt, horizon, fault_plan=PLAN)
         hard, wh = simulate(dt, horizon, fault_plan=PLAN,
-                            enforcement=ENF, rta_bounds=eb)
+                            enforcement=enforcement, rta_bounds=eb)
         merge_margins(margins, base.rta_margins)
         merge_margins(margins, hard.rta_margins)
         for phase, res in (("baseline", base), ("enforced", hard)):
@@ -215,32 +225,54 @@ def run_executor(duration):
     return out, violations
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="short horizon / executor run (CI)")
-    ap.add_argument("--out",
-                    default=os.path.join(ROOT, "BENCH_faults.json"))
-    args = ap.parse_args()
+# config fields this surface exposes as flags (DESIGN.md §14.2)
+BENCH_FAULTS_FLAG_PATHS = ("smoke", "policy.enforcement",
+                           "policy.enforcement_factor",
+                           "policy.watchdog_factor", "output.out")
+BENCH_FAULTS_FLAG_HELPS = {
+    "smoke": "short horizon / executor run (CI)",
+    "policy.enforcement": "enforcement action (abort / throttle)",
+    "policy.enforcement_factor": "budget factor over declared WCET",
+    "policy.watchdog_factor": "wall-clock watchdog factor (0 disables)",
+    "output.out": "output JSON path (default BENCH_faults.json)",
+}
 
-    horizon = 400.0 if args.smoke else 2000.0
-    engines, violations, rta_margin = run_engines(horizon)
-    exec_out, exec_violations = run_executor(0.4 if args.smoke else 1.0)
+
+def resolve_bench_faults_config(argv=None):
+    from repro.experiment import (ExperimentConfig, add_flags, cli_main,
+                                  default_bench_faults_config,
+                                  derive_flags)
+    ap = argparse.ArgumentParser()
+    base = default_bench_faults_config()
+    flags = derive_flags(ExperimentConfig, BENCH_FAULTS_FLAG_PATHS,
+                         helps=BENCH_FAULTS_FLAG_HELPS)
+    add_flags(ap, flags, base)
+    return cli_main(ap, flags, base, argv, expected_kind="bench_faults")
+
+
+def main():
+    cfg = resolve_bench_faults_config()
+    out_path = cfg.output.out or os.path.join(ROOT, "BENCH_faults.json")
+    enf = enforcement_from(cfg.policy)
+
+    horizon = 400.0 if cfg.smoke else 2000.0
+    engines, violations, rta_margin = run_engines(horizon, enf)
+    exec_out, exec_violations = run_executor(0.4 if cfg.smoke else 1.0)
     violations += exec_violations
 
     out = {
         "horizon_ms": horizon,
         "plan": {"seed": PLAN.seed,
                  "faults": [repr(f) for f in PLAN.faults]},
-        "enforcement": {"action": ENF.action, "factor": ENF.factor,
-                        "watchdog_factor": ENF.watchdog_factor},
+        "enforcement": {"action": enf.action, "factor": enf.factor,
+                        "watchdog_factor": enf.watchdog_factor},
         "engines": engines,
         "executor": exec_out,
         "rta_margin": rta_margin,
         "contained": not violations,
         "violations": violations,
     }
-    write_bench_json(args.out, out)
+    write_bench_json(out_path, out, config=cfg)
     for engine in ("quantum", "event"):
         e = engines[engine]
         print(json.dumps({
@@ -257,7 +289,8 @@ def main():
         for v in violations:
             print(f"  - {v}", file=sys.stderr)
         sys.exit(1)
-    print(f"containment held; wrote {args.out}")
+    print(f"containment held; wrote {out_path} "
+          f"(config {cfg.content_digest()[:12]})")
 
 
 if __name__ == "__main__":

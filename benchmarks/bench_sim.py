@@ -366,19 +366,35 @@ def trace_modes(horizon: float) -> dict:
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="short horizons only; assert >=5x at 1,000 ms")
-    ap.add_argument("--profile", action="store_true",
-                    help="record the event-loop phase breakdown")
-    ap.add_argument("--stage", default=None,
-                    help="label this run in the persistent 'entries' map "
-                         "(e.g. before_memmodel / after_memmodel)")
-    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_sim.json"))
-    args = ap.parse_args()
+# config fields this surface exposes as flags (DESIGN.md §14.2)
+BENCH_SIM_FLAG_PATHS = ("smoke", "output.profile", "output.stage",
+                        "output.out")
+BENCH_SIM_FLAG_HELPS = {
+    "smoke": "short horizons only; assert >=5x at 1,000 ms",
+    "output.profile": "record the event-loop phase breakdown",
+    "output.stage": "label this run in the persistent 'entries' map "
+                    "(e.g. before_memmodel / after_memmodel)",
+    "output.out": "output JSON path (default BENCH_sim.json)",
+}
 
-    horizons = [120.0, 1000.0] if args.smoke \
+
+def resolve_bench_sim_config(argv=None):
+    from repro.experiment import (ExperimentConfig, add_flags, cli_main,
+                                  default_bench_sim_config, derive_flags)
+    ap = argparse.ArgumentParser()
+    base = default_bench_sim_config()
+    flags = derive_flags(ExperimentConfig, BENCH_SIM_FLAG_PATHS,
+                         helps=BENCH_SIM_FLAG_HELPS)
+    add_flags(ap, flags, base)
+    return cli_main(ap, flags, base, argv, expected_kind="bench_sim")
+
+
+def main():
+    cfg = resolve_bench_sim_config()
+    smoke = cfg.smoke
+    out_path = cfg.output.out or os.path.join(ROOT, "BENCH_sim.json")
+
+    horizons = [120.0, 1000.0] if smoke \
         else [120.0, 1000.0, 10000.0]
     rows = []
     for h in horizons:
@@ -386,7 +402,7 @@ def main():
         rows.append(row)
         print(json.dumps(row))
 
-    h16 = 1000.0 if args.smoke else 2000.0
+    h16 = 1000.0 if smoke else 2000.0
     row16 = bench_horizon("cores16", h16)
     print(json.dumps(row16))
 
@@ -411,38 +427,38 @@ def main():
         "grid_wall_clock": gw,
         "trace_modes": tm,
     }
-    if args.profile:
+    if cfg.output.profile:
         out["profile"] = profile_event_loop("cores16", h16)
         print(json.dumps(out["profile"]))
 
     # persistent per-stage summary: lets the repo carry a before/after
     # record of engine-refactor speedups on the 16-core workload
     entries = {}
-    if os.path.exists(args.out):
+    if os.path.exists(out_path):
         try:
-            with open(args.out) as f:
+            with open(out_path) as f:
                 entries = json.load(f).get("entries", {})
         except (json.JSONDecodeError, OSError):
             entries = {}
-    if args.stage:
+    if cfg.output.stage:
         entry = {"workload": "cores16", "horizon_ms": h16,
                  "events": row16["events"],
                  "event_wall_s": row16["event_wall_s"],
                  "events_per_sec": row16["events_per_sec"]}
         base = entries.get("before_memmodel")
-        if base and args.stage != "before_memmodel" and \
+        if base and cfg.output.stage != "before_memmodel" and \
                 base.get("events_per_sec"):
             entry["speedup_vs_before"] = round(
                 row16["events_per_sec"] / base["events_per_sec"], 2)
-        entries[args.stage] = entry
+        entries[cfg.output.stage] = entry
     if entries:
         out["entries"] = entries
 
-    write_bench_json(args.out, out)
-    print(f"wrote {args.out}")
+    write_bench_json(out_path, out, config=cfg)
+    print(f"wrote {out_path}")
 
     last = rows[-1]
-    target = 5.0 if args.smoke else 10.0
+    target = 5.0 if smoke else 10.0
     assert last["misses_equal"], "engines disagree on deadline misses"
     assert last["speedup"] >= target, \
         f"speedup {last['speedup']}x below {target}x at {last['horizon_ms']}ms"

@@ -31,15 +31,19 @@ def git_sha() -> "str | None":
     return sha if p.returncode == 0 and sha else None
 
 
-def write_bench_json(path: str, payload: dict) -> str:
+def write_bench_json(path: str, payload: dict, config=None) -> str:
     """Stamp the provenance header onto ``payload`` and write it.
 
-    The header keys (``schema_version``, ``git_sha``, ``host``) are
-    reserved: a payload supplying its own values for them is a bug, so
-    they always win over the payload."""
+    The header keys (``schema_version``, ``git_sha``, ``host`` — plus
+    ``config`` / ``config_digest`` when a resolved ExperimentConfig is
+    passed) are reserved: a payload supplying its own values for them
+    is a bug, so they always win over the payload."""
     doc = dict(payload)
     doc["schema_version"] = BENCH_SCHEMA_VERSION
     doc["git_sha"] = git_sha()
+    if config is not None:
+        doc["config"] = config.to_dict()
+        doc["config_digest"] = config.content_digest()
     doc["host"] = {
         "platform": platform.platform(),
         "machine": platform.machine(),

@@ -3,11 +3,13 @@ gangs, run classical single-core RTA, and confirm with the exact simulator —
 including the co-scheduling counterfactual that RTA cannot certify.
 
     PYTHONPATH=src python examples/schedulability_analysis.py \\
-        [--sweep] [--vgang]
+        [--sweep] [--config configs/experiments/sweep_smoke.json] [--vgang]
 
 --sweep additionally runs a small Monte-Carlo schedulability sweep (random
 gang tasksets per utilization level, event-driven engine fanned across
 processes; see repro.launch.sweep --schedulability for the full version).
+--config points it at a declarative ExperimentConfig (kind "sweep",
+DESIGN.md §14) instead of the built-in example axes, and implies --sweep.
 The sweep's RTA verdicts run on the batched vectorized kernel
 (repro.analysis.batched_rta, DESIGN.md §13) and its sims are
 trace-free — both bit-identical to the scalar/traced path, which stays
@@ -69,12 +71,34 @@ def main():
           f"({out.events} events)")
 
 
-def sweep():
+def sweep(config_path=None):
+    """Monte-Carlo schedulability sweep. With ``config_path`` the sweep
+    is parameterized by a declarative ExperimentConfig (kind "sweep",
+    DESIGN.md §14) instead of the built-in example axes."""
     from repro.launch.sweep import schedulability_sweep
-    res = schedulability_sweep(n_cores=4, n_tasks=4,
-                               utils=(0.5, 0.7, 0.9), n_per_util=25)
-    print("\nMonte-Carlo schedulability (4 cores, 4 gangs, 25 tasksets "
-          f"per point, {res['processes']} processes):")
+    if config_path:
+        from repro.experiment import ExperimentConfig
+        cfg = ExperimentConfig.load(config_path)
+        if cfg.kind != "sweep":
+            raise SystemExit(
+                f"{config_path}: kind {cfg.kind!r} != 'sweep'")
+        res = schedulability_sweep(
+            n_cores=cfg.taskset.cores[0], n_tasks=cfg.taskset.n_tasks,
+            utils=cfg.taskset.utils, n_per_util=cfg.taskset.n_per_point,
+            cycles=cfg.engine.cycles,
+            processes=cfg.engine.processes or None,
+            seed=cfg.taskset.seed, scalar_rta=cfg.engine.scalar_rta,
+            config=cfg)
+        header = (f"\nMonte-Carlo schedulability "
+                  f"(config {res['config_digest'][:12]}, "
+                  f"{cfg.taskset.cores[0]} cores, "
+                  f"{res['processes']} processes):")
+    else:
+        res = schedulability_sweep(n_cores=4, n_tasks=4,
+                                   utils=(0.5, 0.7, 0.9), n_per_util=25)
+        header = ("\nMonte-Carlo schedulability (4 cores, 4 gangs, 25 "
+                  f"tasksets per point, {res['processes']} processes):")
+    print(header)
     for row in res["rows"]:
         print(f"  util={row['util']:.2f}: simulated "
               f"{row['sim_sched_ratio']:.0%} schedulable, RTA admits "
@@ -126,11 +150,15 @@ def vgang_curves(out_dir=None):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--config", metavar="PATH",
+                    help="ExperimentConfig JSON (kind 'sweep') "
+                         "parameterizing the --sweep section; implies "
+                         "--sweep")
     ap.add_argument("--vgang", action="store_true",
                     help="plot acceptance curves from results/vgang")
     args = ap.parse_args()
     main()
-    if args.sweep:
-        sweep()
+    if args.sweep or args.config:
+        sweep(args.config)
     if args.vgang:
         vgang_curves()

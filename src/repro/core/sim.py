@@ -131,7 +131,7 @@ class Simulator:
                  metrics: Optional[MetricsRegistry] = None,
                  rta_bounds: Optional[Dict[str, float]] = None,
                  record_counters: bool = False,
-                 trace: bool = True):
+                 trace: bool = True, **unknown):
         """``dt``: quantum length in ms for the fixed-quantum engine, or
         ``None`` to run the exact event-driven engine (core/events.py) —
         same SimResult, O(events) instead of O(horizon/dt).
@@ -176,6 +176,13 @@ class Simulator:
         ``record_counters`` keeps the
         regulator's per-window history and the gang-change log for
         Perfetto counter tracks (obs.perfetto.export_sim)."""
+        if unknown:
+            raise TypeError(
+                f"Simulator: unknown option(s) {sorted(unknown)}; valid "
+                f"options: be_tasks, budget_policy, dt, enforcement, "
+                f"fault_plan, interference, metrics, reclaim, "
+                f"record_counters, regulation_interval, rt_gang_enabled, "
+                f"rta_bounds, throttle_mode, trace")
         validate_taskset(rt_tasks)
         if not regulation_interval > 0.0:
             raise ValueError(

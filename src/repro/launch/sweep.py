@@ -191,15 +191,38 @@ def _sched_level(args: Tuple[int, int, int, float, float, int, int]
     return out
 
 
+def _sweep_config(n_cores, n_tasks, utils, n_per_util, cycles, processes,
+                  seed, scalar_rta, out=None):
+    """The resolved ExperimentConfig a direct ``schedulability_sweep``
+    call denotes (provenance parity with the CLI shell)."""
+    from repro.experiment import default_sweep_config
+    return default_sweep_config().merged({
+        "taskset": {"cores": [n_cores], "n_tasks": n_tasks,
+                    "utils": list(utils), "n_per_point": n_per_util,
+                    "seed": seed},
+        "engine": {"cycles": cycles, "processes": processes or 0,
+                   "scalar_rta": scalar_rta},
+        "output": {"out": out},
+    })
+
+
 def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
                          utils: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
                          n_per_util: int = 100, cycles: float = 20.0,
                          processes: Optional[int] = None,
-                         seed: int = 0, scalar_rta: bool = False) -> Dict:
+                         seed: int = 0, scalar_rta: bool = False,
+                         config=None) -> Dict:
     """Run ``n_per_util`` random tasksets per utilization level in
     batched shard workers (a few shards per level — enough to use every
     core, orders of magnitude fewer process tasks than one per taskset),
-    aggregating acceptance ratios (simulated + RTA) in the parent."""
+    aggregating acceptance ratios (simulated + RTA) in the parent.
+
+    ``config`` is the resolved ExperimentConfig this run realizes (the
+    CLI shell passes it down; one is synthesized for direct calls), and
+    its content digest is stamped into the output dict."""
+    if config is None:
+        config = _sweep_config(n_cores, n_tasks, utils, n_per_util,
+                               cycles, processes, seed, scalar_rta)
     procs = max(1, processes or min(multiprocessing.cpu_count(), 16))
     shards_per_level = max(1, -(-procs // max(1, len(utils))))
     shards_per_level = min(shards_per_level, n_per_util)
@@ -229,27 +252,50 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
             "wall_s_total": round(sum(r["wall_s"] for r in rs), 3),
         })
     return {"n_cores": n_cores, "n_tasks": n_tasks, "cycles": cycles,
-            "processes": procs, "seed": seed, "rows": rows}
+            "processes": procs, "seed": seed,
+            "config": config.to_dict(),
+            "config_digest": config.content_digest(), "rows": rows}
 
 
-def run_schedulability(args) -> None:
-    utils = tuple(float(u) for u in args.utils.split(","))
+# config fields the schedulability branch exposes as flags; the aliases
+# preserve the legacy spellings (DESIGN.md §14.2)
+SWEEP_FLAG_PATHS = (
+    "taskset.utils", "taskset.n_per_point", "taskset.n_tasks",
+    "taskset.cores", "engine.cycles", "engine.processes", "taskset.seed",
+    "engine.scalar_rta", "output.out")
+SWEEP_FLAG_ALIASES = {"taskset.n_per_point": "--n",
+                      "taskset.n_tasks": "--tasks",
+                      "engine.processes": "--procs"}
+SWEEP_FLAG_HELPS = {
+    "engine.scalar_rta": "per-taskset scalar RTA instead of the batched "
+                         "kernel (same verdicts, for benchmarking)",
+    "output.out": "output JSON path (default results/sched_sweep.json)",
+}
+
+
+def run_schedulability(cfg) -> None:
     out = schedulability_sweep(
-        n_cores=args.cores, n_tasks=args.tasks, utils=utils,
-        n_per_util=args.n, processes=args.procs or None, seed=args.seed,
-        scalar_rta=getattr(args, "scalar_rta", False))
+        n_cores=cfg.taskset.cores[0], n_tasks=cfg.taskset.n_tasks,
+        utils=cfg.taskset.utils, n_per_util=cfg.taskset.n_per_point,
+        cycles=cfg.engine.cycles,
+        processes=cfg.engine.processes or None, seed=cfg.taskset.seed,
+        scalar_rta=cfg.engine.scalar_rta, config=cfg)
     for row in out["rows"]:
         print(f"util={row['util']:.2f} sim={row['sim_sched_ratio']:.2f} "
               f"rta={row['rta_sched_ratio']:.2f} n={row['n']} "
               f"({row['events_total']} events in {row['wall_s_total']}s)")
-    path = args.out or os.path.join(ROOT, "results", "sched_sweep.json")
-    os.makedirs(os.path.dirname(path), exist_ok=True)
+    path = cfg.output.out or os.path.join(ROOT, "results",
+                                          "sched_sweep.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
-    print("wrote", path)
+    print(f"wrote {path} (config {out['config_digest'][:12]})")
 
 
 def main():
+    from repro.experiment import (ConfigurationError, ExperimentConfig,
+                                  add_flags, default_sweep_config,
+                                  derive_flags, resolve_config)
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--single-pod-only", action="store_true")
@@ -257,20 +303,19 @@ def main():
     ap.add_argument("--schedulability", action="store_true",
                     help="Monte-Carlo gang schedulability sweep instead "
                          "of the dry-run compile sweep")
-    ap.add_argument("--utils", default="0.3,0.5,0.7,0.9")
-    ap.add_argument("--n", type=int, default=100)
-    ap.add_argument("--tasks", type=int, default=4)
-    ap.add_argument("--cores", type=int, default=4)
-    ap.add_argument("--procs", type=int, default=0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--scalar-rta", action="store_true",
-                    help="per-taskset scalar RTA instead of the batched "
-                         "kernel (same verdicts, for benchmarking)")
-    ap.add_argument("--out", default=None)
+    base = default_sweep_config()
+    flags = derive_flags(ExperimentConfig, SWEEP_FLAG_PATHS,
+                         aliases=SWEEP_FLAG_ALIASES,
+                         helps=SWEEP_FLAG_HELPS)
+    add_flags(ap, flags, base)
     args = ap.parse_args()
 
-    if args.schedulability:
-        run_schedulability(args)
+    if args.schedulability or args.config:
+        try:
+            cfg = resolve_config(base, args, flags, expected_kind="sweep")
+        except ConfigurationError as e:
+            ap.error(str(e))
+        run_schedulability(cfg)
         return
 
     runnable, skipped = valid_cells()

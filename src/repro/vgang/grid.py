@@ -47,6 +47,7 @@ combined results/vgang/summary.json; plot/print the curves with
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import multiprocessing
 import os
@@ -56,6 +57,9 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gang import RTTask
+from repro.experiment import (ExperimentConfig, GRID_SMOKE_OVERRIDES,
+                              add_flags, cli_main, default_grid_config,
+                              derive_flags)
 from repro.launch.sweep import ROOT, taskset_seed, uunifast
 from repro.obs.margins import merge_margins, overall
 from repro.vgang.formation import (HEURISTICS, assign_priorities,
@@ -122,8 +126,29 @@ def n_tasks_for(n_cores: int) -> int:
     return 3 + (n_cores + 1) // 2
 
 
-def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
-                           bool, int, float, float]) -> Dict:
+@dataclasses.dataclass(frozen=True)
+class GridCell:
+    """One (cores, dist, util) pool-worker payload.  A typed payload —
+    not a bare tuple — so a misspelled or stale field fails loudly at
+    construction (``TypeError`` naming the unknown keyword) instead of
+    silently shifting positional slots."""
+    seed: int
+    n_cores: int
+    dist: str
+    util: float
+    n_sets: int
+    heuristics: Tuple[str, ...]
+    rtg: bool
+    rtg_dr: bool
+    sim_check: int
+    gamma: float
+    cycles: float
+    scalar_rta: bool = False
+    trace: bool = False
+    dt: Optional[float] = None
+
+
+def _grid_cell(cell: GridCell) -> Dict:
     """Pool worker: one (cores, dist, util) cell — all n tasksets, all
     heuristics, in one process.
 
@@ -132,14 +157,16 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
     restructure cannot perturb them); (2) one shard-batched RTA call
     per policy column over all n tasksets at once
     (``batched_accepts`` / ``batched_accepts_rtg_throttle``,
-    bit-identical to the scalar loop — ``scalar_rta`` in the cell tuple
-    keeps the old per-taskset loop reachable for benchmarking); (3) the
-    first ``sim_check`` tasksets get event-engine sim-checks with
+    bit-identical to the scalar loop — ``cell.scalar_rta`` keeps the
+    old per-taskset loop reachable for benchmarking); (3) the first
+    ``sim_check`` tasksets get event-engine sim-checks (default
     ``trace=False`` — their verdicts come from the batched arrays, and
-    the SimResult counters are trace-independent."""
+    the SimResult counters are trace-independent)."""
     (seed, n_cores, dist, util, n_sets, heuristics, rtg, rtg_dr,
-     sim_check, gamma, cycles, *rest) = args
-    scalar_rta = bool(rest[0]) if rest else False
+     sim_check, gamma, cycles, scalar_rta) = (
+        cell.seed, cell.n_cores, cell.dist, cell.util, cell.n_sets,
+        cell.heuristics, cell.rtg, cell.rtg_dr, cell.sim_check,
+        cell.gamma, cell.cycles, cell.scalar_rta)
     columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ()) \
         + ((RECLAIM_COLUMN,) if rtg_dr else ())
     sim_accept = {h: 0 for h in columns}
@@ -226,7 +253,9 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
             bounds = policy.member_bounds() if rta_ok else None
             if bounds and any(b is None for b in bounds.values()):
                 bounds = None
-            r = policy.simulate(horizon, rta_bounds=bounds, trace=False)
+            sim_kw = {} if cell.dt is None else {"dt": cell.dt}
+            r = policy.simulate(horizon, rta_bounds=bounds,
+                                trace=cell.trace, **sim_kw)
             sim_ok = sum(r.deadline_misses.values()) == 0
             sim_accept[h] += sim_ok
             if rta_ok and not sim_ok:
@@ -248,11 +277,11 @@ def _grid_cell(args: Tuple[int, int, str, float, int, Sequence[str],
     }
 
 
-def _skipped_row(cell: Tuple) -> Dict:
+def _skipped_row(cell: GridCell) -> Dict:
     """Placeholder row for a cell that failed/timed out twice: keeps the
     curve files structurally complete; consumers (print_curves, the
     plotting example) filter on the ``skipped`` flag."""
-    _, n_cores, dist, util = cell[:4]
+    n_cores, dist, util = cell.n_cores, cell.dist, cell.util
     return {"n_cores": n_cores, "dist": dist, "util": util, "n": 0,
             "accept": None, "sim_accept": None, "sim_n": 0,
             "rta_margin": None, "soundness_violations": 0,
@@ -260,7 +289,7 @@ def _skipped_row(cell: Tuple) -> Dict:
             "skipped": True}
 
 
-def _dispatch(cells: Sequence[Tuple], procs: int,
+def _dispatch(cells: Sequence[GridCell], procs: int,
               cell_timeout: Optional[float],
               worker=_grid_cell) -> Tuple[List[Dict], List[Tuple]]:
     """Run the cell workers with per-cell hardening: a cell that exceeds
@@ -294,8 +323,8 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
                     except Exception as e:
                         is_to = isinstance(e, multiprocessing.TimeoutError)
                         timed_out = timed_out or is_to
-                        print(f"grid: cell {cells[i][1]}c/"
-                              f"{cells[i][2]}/u={cells[i][3]} "
+                        print(f"grid: cell {cells[i].n_cores}c/"
+                              f"{cells[i].dist}/u={cells[i].util} "
                               f"{'timed out' if is_to else f'failed ({e!r})'}"
                               f" (attempt {attempt + 1})",
                               file=sys.stderr)
@@ -318,8 +347,9 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
                     try:
                         out[i] = worker(cells[i])
                     except Exception as e:
-                        print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/"
-                              f"u={cells[i][3]} failed ({e!r}) "
+                        print(f"grid: cell {cells[i].n_cores}c/"
+                              f"{cells[i].dist}/u={cells[i].util} "
+                              f"failed ({e!r}) "
                               f"(attempt {attempt + 1})", file=sys.stderr)
                         failed.append(i)
             todo = failed
@@ -330,8 +360,8 @@ def _dispatch(cells: Sequence[Tuple], procs: int,
     skipped = [cells[i] for i in todo]
     for i in todo:
         out[i] = _skipped_row(cells[i])
-        print(f"grid: cell {cells[i][1]}c/{cells[i][2]}/u={cells[i][3]} "
-              f"skipped after retry", file=sys.stderr)
+        print(f"grid: cell {cells[i].n_cores}c/{cells[i].dist}/"
+              f"u={cells[i].util} skipped after retry", file=sys.stderr)
     return [out[i] for i in range(len(cells))], skipped
 
 
@@ -348,6 +378,26 @@ def _margin_headline(results: Sequence[Dict]) -> Dict:
             "negative": sum(m["negative"] for m in recs)}
 
 
+def _grid_config(cores, dists, utils, heuristics, n_per_cell, sim_check,
+                 gamma, cycles, seed, processes, out_dir, cell_timeout,
+                 scalar_rta, trace, dt) -> ExperimentConfig:
+    """The resolved ExperimentConfig a direct ``run_grid(...)`` call
+    denotes — so programmatic runs stamp the same provenance digest a
+    ``--config`` / legacy-CLI run with equal knobs would."""
+    base = default_grid_config()
+    return base.merged({
+        "taskset": {"cores": list(cores), "dists": list(dists),
+                    "utils": list(utils), "n_per_point": n_per_cell,
+                    "gamma": gamma, "seed": seed},
+        "policy": {"heuristics": list(heuristics)},
+        "engine": {"sim_check": sim_check, "cycles": cycles,
+                   "processes": processes or 0,
+                   "cell_timeout": cell_timeout or 0.0,
+                   "scalar_rta": scalar_rta, "trace": trace, "dt": dt},
+        "output": {"out": None if out_dir == OUT_DEFAULT else out_dir},
+    })
+
+
 def run_grid(cores: Sequence[int] = (4, 8, 16),
              dists: Sequence[str] = ("light", "mixed", "heavy"),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
@@ -360,9 +410,21 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              out_dir: str = OUT_DEFAULT,
              cell_timeout: Optional[float] = None,
              scalar_rta: bool = False,
-             worker=_grid_cell) -> Dict:
+             trace: bool = False, dt: Optional[float] = None,
+             worker=_grid_cell,
+             config: Optional[ExperimentConfig] = None) -> Dict:
     """Run the full grid; one batched worker per (cores, dist, util)
-    cell; aggregate and write per-(cores, dist) curve files + summary."""
+    cell; aggregate and write per-(cores, dist) curve files + summary.
+
+    ``config`` is the resolved ExperimentConfig this run realizes (the
+    CLI shell passes it down); when None one is synthesized from the
+    arguments, so every summary/curve file carries a ``config_digest``
+    regardless of entry point."""
+    if config is None:
+        config = _grid_config(cores, dists, utils, heuristics, n_per_cell,
+                              sim_check, gamma, cycles, seed, processes,
+                              out_dir, cell_timeout, scalar_rta, trace, dt)
+    digest = config.content_digest()
     # the singleton baseline is always evaluated under its curve label
     # "rtgang"; accept (and drop) it here so `--heuristics rtgang,ffd`
     # means what it reads as; "rtgT" selects the RTG-throttle policy
@@ -377,8 +439,11 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
         raise ValueError(f"unknown heuristics {unknown}; known: rtgang, "
                          f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}, "
                          f"{RECLAIM_COLUMN}")
-    cells = [(seed, m, d, u, n_per_cell, tuple(heuristics), rtg, rtg_dr,
-              sim_check, gamma, cycles, scalar_rta)
+    cells = [GridCell(seed=seed, n_cores=m, dist=d, util=u,
+                      n_sets=n_per_cell, heuristics=tuple(heuristics),
+                      rtg=rtg, rtg_dr=rtg_dr, sim_check=sim_check,
+                      gamma=gamma, cycles=cycles, scalar_rta=scalar_rta,
+                      trace=trace, dt=dt)
              for m in cores for d in dists for u in utils]
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
     procs = max(1, min(procs, len(cells)))
@@ -391,6 +456,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                              ([RTG_COLUMN] if rtg else []) +
                              ([RECLAIM_COLUMN] if rtg_dr else []),
                "utils": list(utils),
+               "config": config.to_dict(),
+               "config_digest": digest,
                "soundness_violations": sum(r["soundness_violations"]
                                            for r in results),
                "rta_margin": _margin_headline(results),
@@ -406,7 +473,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
             path = os.path.join(out_dir, f"grid_{m}c_{d}.json")
             with open(path, "w") as f:
                 json.dump({"n_cores": m, "dist": d, "seed": seed,
-                           "gamma": gamma, "rows": rows}, f, indent=1)
+                           "gamma": gamma, "config_digest": digest,
+                           "rows": rows}, f, indent=1)
             summary["files"].append(os.path.relpath(path, ROOT))
     with open(os.path.join(out_dir, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)
@@ -432,53 +500,68 @@ def print_curves(results: List[Dict]) -> None:
             print(line)
 
 
-def main(argv: Optional[Sequence[str]] = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI cell: 2 utils x 2 heuristics x 4 cores")
-    ap.add_argument("--cores", default="4,8,16")
-    ap.add_argument("--dists", default="light,mixed,heavy")
-    ap.add_argument("--utils", default="0.4,0.7,0.9,1.0,1.1,1.2,1.4,1.6,2.0")
-    ap.add_argument("--heuristics",
-                    default="ffd,bestfit,intfaware,rtgT,rtgT+dr")
-    ap.add_argument("--n", type=int, default=50)
-    ap.add_argument("--sim-check", type=int, default=2)
-    ap.add_argument("--gamma", type=float, default=0.5)
-    ap.add_argument("--cycles", type=float, default=20.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--procs", type=int, default=0)
-    ap.add_argument("--cell-timeout", type=float, default=0.0,
-                    help="per-cell wall-clock timeout in seconds (one "
-                         "retry, then the cell is skipped); 0 = none")
-    ap.add_argument("--scalar-rta", action="store_true",
-                    help="per-taskset scalar RTA loop instead of the "
+# config fields this surface exposes as flags (DESIGN.md §14.2); the
+# aliases preserve the legacy spellings
+GRID_FLAG_PATHS = (
+    "smoke", "taskset.cores", "taskset.dists", "taskset.utils",
+    "policy.heuristics", "taskset.n_per_point", "engine.sim_check",
+    "taskset.gamma", "engine.cycles", "taskset.seed", "engine.processes",
+    "engine.cell_timeout", "engine.scalar_rta", "engine.trace",
+    "engine.dt", "engine.backend", "output.out")
+GRID_FLAG_ALIASES = {"taskset.n_per_point": "--n",
+                     "engine.processes": "--procs"}
+GRID_FLAG_HELPS = {
+    "smoke": "CI cell: 2 utils x 4 heuristics x 4 cores (expands to "
+             "explicit fields, then clears itself — a --smoke run and "
+             "configs/experiments/grid_smoke.json resolve to the same "
+             "axes)",
+    "engine.cell_timeout": "per-cell wall-clock timeout in seconds (one "
+                           "retry, then the cell is skipped); 0 = none",
+    "engine.scalar_rta": "per-taskset scalar RTA loop instead of the "
                          "shard-batched kernel (DESIGN.md §13) — same "
-                         "verdicts bit-for-bit, for benchmarking")
-    ap.add_argument("--out", default=OUT_DEFAULT)
-    args = ap.parse_args(argv)
+                         "verdicts bit-for-bit, for benchmarking",
+    "output.out": "output directory (default results/vgang)",
+}
 
-    if args.smoke:
-        args.cores, args.dists = "4", "mixed"
-        args.utils = "0.8,1.6"
-        args.heuristics = "ffd,intfaware,rtgT,rtgT+dr"
-        args.n, args.sim_check = 10, 1
 
+def resolve_grid_config(argv: Optional[Sequence[str]] = None
+                        ) -> ExperimentConfig:
+    """base grid config <- --config FILE <- explicit flags, with the
+    --smoke sugar expanded into its explicit fields."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    base = default_grid_config()
+    flags = derive_flags(ExperimentConfig, GRID_FLAG_PATHS,
+                         aliases=GRID_FLAG_ALIASES, helps=GRID_FLAG_HELPS)
+    add_flags(ap, flags, base)
+    cfg = cli_main(ap, flags, base, argv, expected_kind="grid")
+    if cfg.smoke:
+        cfg = cfg.merged(GRID_SMOKE_OVERRIDES).merged({"smoke": False})
+    return cfg
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    cfg = resolve_grid_config(argv)
+    if cfg.engine.backend != "auto":
+        # pool workers inherit via fork; see analysis/batched_rta
+        os.environ["REPRO_RTA_BACKEND"] = cfg.engine.backend
+    out_dir = cfg.output.out or OUT_DEFAULT
     out = run_grid(
-        cores=tuple(int(c) for c in args.cores.split(",")),
-        dists=tuple(args.dists.split(",")),
-        utils=tuple(float(u) for u in args.utils.split(",")),
-        heuristics=tuple(args.heuristics.split(",")),
-        n_per_cell=args.n, sim_check=args.sim_check, gamma=args.gamma,
-        cycles=args.cycles, seed=args.seed,
-        processes=args.procs or None, out_dir=args.out,
-        cell_timeout=args.cell_timeout or None,
-        scalar_rta=args.scalar_rta)
+        cores=cfg.taskset.cores, dists=cfg.taskset.dists,
+        utils=cfg.taskset.utils, heuristics=cfg.policy.heuristics,
+        n_per_cell=cfg.taskset.n_per_point,
+        sim_check=cfg.engine.sim_check, gamma=cfg.taskset.gamma,
+        cycles=cfg.engine.cycles, seed=cfg.taskset.seed,
+        processes=cfg.engine.processes or None, out_dir=out_dir,
+        cell_timeout=cfg.engine.cell_timeout or None,
+        scalar_rta=cfg.engine.scalar_rta, trace=cfg.engine.trace,
+        dt=cfg.engine.dt, config=cfg)
     print_curves(out["results"])
     s = out["summary"]
     print(f"\nwrote {len(s['files'])} curve files + summary to "
-          f"{args.out} in {s['wall_s']}s "
+          f"{out_dir} in {s['wall_s']}s "
           f"(soundness violations: {s['soundness_violations']}, "
-          f"skipped cells: {s['skipped_cells']})")
+          f"skipped cells: {s['skipped_cells']}, "
+          f"config {s['config_digest'][:12]})")
     return 1 if s["soundness_violations"] else 0
 
 

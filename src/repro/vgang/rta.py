@@ -160,6 +160,33 @@ def _window_runtimes(vg: VirtualGang, interference: PairwiseInterference,
     return run
 
 
+def _throttle_profile(vg: VirtualGang, m: RTTask, run: Dict[str, float],
+                      interference: PairwiseInterference
+                      ) -> List[Tuple[float, float]]:
+    """Piecewise ``(seg_len, slowdown)`` profile of member ``m`` within
+    one regulation window under the static duty cycle ``run`` — the
+    exact profile ``rtg_throttle_wcet`` integrates, shared with the
+    vectorized evaluator (analysis/batched_rta.window_eval) so both
+    paths see identical segments."""
+    q_m = run[m.name]
+    cuts = sorted({min(run[o.name], q_m) for o in vg.members
+                   if o is not m} | {q_m})
+    profile: List[Tuple[float, float]] = []
+    t_prev = 0.0
+    for b in cuts:
+        if b <= t_prev + 1e-15:
+            continue
+        s = 1.0
+        for o in vg.members:
+            if o is not m and run[o.name] > t_prev + 1e-15:
+                f = interference(m.name, o.name)
+                if f > s:
+                    s = f
+        profile.append((b - t_prev, s))
+        t_prev = b
+    return profile
+
+
 def rtg_throttle_wcet(vg: VirtualGang,
                       interference: PairwiseInterference = no_interference,
                       interval: float = 1.0) -> float:
@@ -186,22 +213,7 @@ def rtg_throttle_wcet(vg: VirtualGang,
         q_m = run[m.name]
         if q_m <= 0.0:
             return float("inf")
-        # piecewise slowdown profile of m within one window
-        cuts = sorted({min(run[o.name], q_m) for o in vg.members
-                       if o is not m} | {q_m})
-        profile = []                      # [(seg_len, slowdown)]
-        t_prev = 0.0
-        for b in cuts:
-            if b <= t_prev + 1e-15:
-                continue
-            s = 1.0
-            for o in vg.members:
-                if o is not m and run[o.name] > t_prev + 1e-15:
-                    f = interference(m.name, o.name)
-                    if f > s:
-                        s = f
-            profile.append((b - t_prev, s))
-            t_prev = b
+        profile = _throttle_profile(vg, m, run, interference)
         work_per_window = sum(d / s for d, s in profile)
         if work_per_window <= 1e-12:
             return float("inf")
@@ -325,12 +337,14 @@ def _reclaim_extensions(vg: VirtualGang,
     return u
 
 
-def _window_work(m: RTTask, present: Dict[str, float], u_m: float,
-                 interference: PairwiseInterference
-                 ) -> Tuple[float, List[Tuple[float, float]]]:
-    """Work member ``m`` completes per window when unstalled over
-    [0, u_m) against co-members present over [0, present[o]): piecewise
-    integral of 1/s(t), plus the profile for finish-offset pricing."""
+def _presence_profile(m: RTTask, present: Dict[str, float], u_m: float,
+                      interference: PairwiseInterference
+                      ) -> List[Tuple[float, float]]:
+    """Piecewise ``(seg_len, slowdown)`` profile of member ``m``
+    unstalled over [0, u_m) against co-members present over
+    [0, present[o]) — the profile ``reclaim_wcet`` integrates, shared
+    with the vectorized evaluator so both paths see identical
+    segments."""
     cuts = sorted({min(p, u_m) for o, p in present.items()} | {u_m})
     profile: List[Tuple[float, float]] = []
     t_prev = 0.0
@@ -345,6 +359,16 @@ def _window_work(m: RTTask, present: Dict[str, float], u_m: float,
                     s = f
         profile.append((b - t_prev, s))
         t_prev = b
+    return profile
+
+
+def _window_work(m: RTTask, present: Dict[str, float], u_m: float,
+                 interference: PairwiseInterference
+                 ) -> Tuple[float, List[Tuple[float, float]]]:
+    """Work member ``m`` completes per window when unstalled over
+    [0, u_m) against co-members present over [0, present[o]): piecewise
+    integral of 1/s(t), plus the profile for finish-offset pricing."""
+    profile = _presence_profile(m, present, u_m, interference)
     return sum(d / s for d, s in profile), profile
 
 
@@ -629,9 +653,10 @@ def batched_schedulable_rtg_throttle(
     """Shard-batched ``schedulable_rtg_throttle``.
 
     The per-window WCET bounds (``rtg_throttle_wcet`` /
-    ``reclaim_wcet``) stay scalar — they are per-vgang closed forms, not
-    fixed points — while every set's Audsley iteration runs in the
-    batched kernel with per-analyzed-lane ``crpd`` (the stall-prone
+    ``reclaim_wcet``) evaluate through the vectorized closed-form
+    kernel (``analysis/batched_rta.window_eval``) across the whole
+    shard, and every set's Audsley iteration runs in the batched
+    fixed-point kernel with per-analyzed-lane ``crpd`` (the stall-prone
     realignment surcharge).  Infinite-WCET vgangs are excluded from
     analysis but still interfere, exactly like the scalar skip."""
     import numpy as _np
@@ -663,9 +688,15 @@ def batched_schedulable_rtg_throttle(
 def _rtg_rows(vgang_sets, intfs, interval, reclaim, wcet_cache):
     """Validated ``(name, C, P, prio)`` rows plus per-set crpd lists for
     the rtgT / rtgT+dr columns, in shard order — same checks and error
-    messages as scalar ``schedulable_rtg_throttle``."""
-    rows = []
-    crpd_rows = []
+    messages as scalar ``schedulable_rtg_throttle``.
+
+    The per-window WCET bounds are priced through the vectorized
+    closed-form evaluator (analysis/batched_rta) across the whole
+    shard: static bounds for every cache-miss vgang in one batch, and
+    (reclaim=True) every vgang's phase iteration in lockstep — both
+    bit-identical to their scalar twins."""
+    from repro.analysis.batched_rta import (batched_reclaim_wcet,
+                                            batched_rtg_throttle_wcet)
     for vgs, intf in zip(vgang_sets, intfs):
         prios = [vg.prio for vg in vgs]
         if len(set(prios)) != len(prios):
@@ -686,14 +717,45 @@ def _rtg_rows(vgang_sets, intfs, interval, reclaim, wcet_cache):
                 raise ValueError(
                     f"RTG-throttle RTA needs zero release offsets: vgang "
                     f"{vg.name!r} members carry offsets {off}")
-        row = []
-        crpd_row = []
+    flat = [(vg, intf) for vgs, intf in zip(vgang_sets, intfs)
+            for vg in vgs]
+    # static bound + stall flag per vgang, batched over cache misses
+    statics: Dict[int, Tuple[float, bool]] = {}
+    miss_pairs, miss_pos = [], []
+    for pos, (vg, intf) in enumerate(flat):
+        if wcet_cache is not None:
+            hit = wcet_cache.get((id(vg), id(intf), interval))
+            if hit is not None:
+                statics[pos] = (hit[2], hit[3])
+                continue
+        miss_pairs.append((vg, intf))
+        miss_pos.append(pos)
+    if miss_pairs:
+        ws = batched_rtg_throttle_wcet([p[0] for p in miss_pairs],
+                                       [p[1] for p in miss_pairs],
+                                       interval)
+        for (vg, intf), w, pos in zip(miss_pairs, ws, miss_pos):
+            stall = _stall_prone(vg, intf, interval)
+            statics[pos] = (w, stall)
+            if wcet_cache is not None:
+                # key retains the objects, see _rtg_static_bounds
+                wcet_cache[(id(vg), id(intf), interval)] = \
+                    (vg, intf, w, stall)
+    reclaims = None
+    if reclaim:
+        reclaims = batched_reclaim_wcet([vg for vg, _ in flat],
+                                        [i for _, i in flat], interval)
+    rows, crpd_rows = [], []
+    pos = 0
+    for vgs, intf in zip(vgang_sets, intfs):
+        row, crpd_row = [], []
         for vg in vgs:
-            w, stall = _rtg_static_bounds(vg, intf, interval, wcet_cache)
+            w, stall = statics[pos]
             if reclaim:
-                w = min(w, reclaim_wcet(vg, intf, interval))
+                w = min(w, reclaims[pos])
             row.append((vg.name, w, vg.period, float(vg.prio)))
             crpd_row.append(interval if stall else 0.0)
+            pos += 1
         rows.append(row)
         crpd_rows.append(crpd_row)
     return rows, crpd_rows

@@ -75,7 +75,12 @@ class VirtualGangPolicy:
     def __init__(self, vgangs: Sequence[VirtualGang], n_cores: int,
                  interference: PairwiseInterference = no_interference,
                  auto_prio: bool = True, rtg_throttle: bool = False,
-                 reclaim: bool = False):
+                 reclaim: bool = False, **unknown):
+        if unknown:
+            raise TypeError(
+                f"VirtualGangPolicy: unknown option(s) {sorted(unknown)}; "
+                f"valid options: interference, auto_prio, rtg_throttle, "
+                f"reclaim")
         prios = [vg.prio for vg in vgangs]
         if auto_prio and len(set(prios)) != len(prios):
             vgangs = assign_priorities(vgangs)

@@ -205,3 +205,94 @@ def test_jax_backend_matches_numpy():
         for name in ra:
             assert ra[name]["wcrt"] == rb[name]["wcrt"]
             assert ra[name]["ok"] == rb[name]["ok"]
+
+
+# ---- window-kernel closed form (ISSUE 9 satellite): the vectorized
+# rtg-throttle / reclaim window evaluation must be bit-identical to the
+# scalar segment walk, including the infinite (starved-sibling) bounds.
+
+def _window_workload(n_sets, seed, heuristic="intfaware"):
+    from repro.vgang.formation import assign_priorities
+    out = []
+    for k in range(n_sets):
+        m = (4, 8, 16)[k % 3]
+        rng = random.Random(taskset_seed(seed, k, 1.3))
+        tasks = random_vgang_taskset(rng, m, n_tasks_for(m),
+                                     rng.uniform(0.3, 2.0), "mixed")
+        intf = intensity_interference(tasks, rng.choice((0.5, 2.0, 8.0)))
+        out.append((assign_priorities(HEURISTICS[heuristic](
+            tasks, m, intf)), intf))
+    return out
+
+
+def test_batched_rtg_throttle_wcet_bit_identical():
+    from repro.analysis.batched_rta import batched_rtg_throttle_wcet
+    from repro.vgang.rta import rtg_throttle_wcet
+    work = _window_workload(40, seed=11)
+    flat = [(vg, intf) for vgs, intf in work for vg in vgs]
+    got = batched_rtg_throttle_wcet([vg for vg, _ in flat],
+                                    [i for _, i in flat])
+    assert len(got) == len(flat)
+    saw_inf = False
+    for (vg, intf), g in zip(flat, got):
+        w = rtg_throttle_wcet(vg, intf)
+        assert g == w or (math.isinf(g) and math.isinf(w)), \
+            (vg.name, g, w)
+        saw_inf |= math.isinf(w)
+    assert len(flat) > 50
+
+
+def test_batched_reclaim_wcet_bit_identical():
+    from repro.analysis.batched_rta import batched_reclaim_wcet
+    from repro.vgang.rta import reclaim_wcet
+    work = _window_workload(40, seed=12)
+    flat = [(vg, intf) for vgs, intf in work for vg in vgs]
+    got = batched_reclaim_wcet([vg for vg, _ in flat],
+                               [i for _, i in flat])
+    assert len(got) == len(flat)
+    for (vg, intf), g in zip(flat, got):
+        w = reclaim_wcet(vg, intf)
+        assert g == w or (math.isinf(g) and math.isinf(w)), \
+            (vg.name, g, w)
+
+
+def test_batched_window_wcet_starved_sibling_inf():
+    """A fully memory-bound critical member leaves zero sibling budget:
+    the sibling's window never makes progress and both scalar and
+    batched kernels must price the gang at exactly +inf."""
+    from repro.analysis.batched_rta import (batched_reclaim_wcet,
+                                            batched_rtg_throttle_wcet)
+    from repro.vgang.formation import VirtualGang
+    from repro.vgang.rta import reclaim_wcet, rtg_throttle_wcet
+    # crit's C*slow dominates -> it is the protected member; its full
+    # memory intensity leaves Q = (1 - 1.0) * interval = 0 for siblings
+    crit = RTTask("crit", wcet=9.0, period=20.0, cores=(0,), prio=1,
+                  mem_intensity=1.0)
+    sib = RTTask("sib", wcet=1.0, period=20.0, cores=(1,), prio=1,
+                 mem_intensity=0.9)
+    vg = VirtualGang("starved", [crit, sib], prio=1)
+    intf = intensity_interference([crit, sib], 0.5)
+    w = rtg_throttle_wcet(vg, intf)
+    assert math.isinf(w)
+    (b,) = batched_rtg_throttle_wcet([vg], [intf])
+    assert math.isinf(b)
+    r = reclaim_wcet(vg, intf)
+    (br,) = batched_reclaim_wcet([vg], [intf])
+    assert r == br or (math.isinf(r) and math.isinf(br))
+
+
+def test_window_eval_pad_lanes_exact_zero():
+    """Padded lanes (d=0, s=1) contribute exactly 0.0 to the cumsum, so
+    mixed-length profiles evaluate identically to their scalar walks."""
+    import numpy as np
+    from repro.analysis.batched_rta import pad_profiles, window_eval
+    profiles = [[(0.4, 1.0), (0.6, 0.5)], [(1.0, 1.0)]]
+    D, S, valid = pad_profiles(profiles)
+    work, full, offset, feasible = window_eval(
+        D, S, valid, np.array([3.2, 2.0]))
+    # lane 0: work/interval = 0.4 + 1.2 = 1.6; lane 1: 1.0
+    assert work[0] == 0.4 + 0.6 / 0.5 and work[1] == 1.0
+    assert feasible.all()
+    # need=3.2 -> 2 full windows (3.2) ... exactly consumed at the end
+    # of window 2, need=2.0 -> 1 full window + offset 1.0
+    assert (full[1], offset[1]) == (1.0, 1.0)

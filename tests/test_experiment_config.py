@@ -1,0 +1,269 @@
+"""Declarative ExperimentConfig layer (src/repro/experiment/,
+DESIGN.md §14): serialization round-trips, nested hydration, unknown-key
+rejection with field paths, cross-field validation, CLI override
+precedence (base preset < --config file < explicit flags), provenance
+digests, the checked-in canonical configs, and a grid smoke asserting a
+--config run produces rows identical to the legacy-flag spelling."""
+import argparse
+import glob
+import json
+import os
+
+import pytest
+
+from repro.experiment import (ConfigurationError, ExperimentConfig,
+                              GRID_SMOKE_OVERRIDES, UNSET, add_flags,
+                              default_bench_faults_config,
+                              default_grid_config, default_sweep_config,
+                              derive_flags, resolve_config)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CONFIG_DIR = os.path.join(ROOT, "configs", "experiments")
+
+
+# ---- serialization ---------------------------------------------------
+
+def test_round_trip_json():
+    cfg = default_grid_config()
+    again = ExperimentConfig.from_json(cfg.to_json())
+    assert again == cfg
+    assert again.to_json() == cfg.to_json()
+
+
+def test_stable_field_order():
+    cfg = default_grid_config()
+    keys = list(json.loads(cfg.to_json()))
+    # declaration order, not alphabetical — stable across dumps
+    assert keys == list(json.loads(cfg.to_json()))
+    assert keys[0] == "kind"
+
+
+def test_save_load(tmp_path):
+    path = str(tmp_path / "exp.json")
+    cfg = default_sweep_config()
+    cfg.save(path)
+    assert ExperimentConfig.load(path) == cfg
+
+
+def test_nested_hydration_coerces_sequences():
+    cfg = ExperimentConfig.from_dict({
+        "kind": "grid", "name": "t",
+        "taskset": {"cores": [4, 8], "utils": [1, 2]},
+    })
+    assert cfg.taskset.cores == (4, 8)
+    assert cfg.taskset.utils == (1.0, 2.0)
+    assert isinstance(cfg.taskset.utils[0], float)
+
+
+# ---- validation ------------------------------------------------------
+
+def test_unknown_top_level_key():
+    with pytest.raises(ConfigurationError) as ei:
+        ExperimentConfig.from_dict({"kind": "grid", "name": "t",
+                                    "tasksetx": {}})
+    assert "tasksetx" in str(ei.value)
+
+
+def test_unknown_nested_key_carries_field_path():
+    with pytest.raises(ConfigurationError) as ei:
+        ExperimentConfig.from_dict({
+            "kind": "grid", "name": "t",
+            "taskset": {"coresx": [4]},
+        })
+    msg = str(ei.value)
+    assert "taskset" in msg and "coresx" in msg
+
+
+def test_bad_kind_rejected():
+    with pytest.raises(ConfigurationError) as ei:
+        ExperimentConfig.from_dict({"kind": "nope", "name": "t"})
+    assert "kind" in str(ei.value)
+
+
+def test_reclaim_requires_rtg_throttle():
+    with pytest.raises(ConfigurationError) as ei:
+        default_bench_faults_config().merged(
+            {"policy": {"reclaim": True, "rtg_throttle": False}})
+    assert "reclaim" in str(ei.value)
+
+
+def test_type_mismatch_carries_field_path():
+    with pytest.raises(ConfigurationError) as ei:
+        default_grid_config().merged({"engine": {"cycles": "fast"}})
+    assert "engine.cycles" in str(ei.value)
+
+
+# ---- functional updates ---------------------------------------------
+
+def test_merged_is_deep_and_non_destructive():
+    base = default_grid_config()
+    new = base.merged({"taskset": {"n_per_point": 7}})
+    assert new.taskset.n_per_point == 7
+    assert base.taskset.n_per_point != 7
+    assert new.taskset.cores == base.taskset.cores  # untouched siblings
+
+
+def test_with_value_and_value_at():
+    cfg = default_grid_config().with_value("engine.sim_check", 3)
+    assert cfg.value_at("engine.sim_check") == 3
+    with pytest.raises(ConfigurationError):
+        cfg.with_value("engine.nope", 1)
+
+
+def test_content_digest_tracks_content():
+    a = default_grid_config()
+    b = a.merged({"taskset": {"seed": 1}})
+    assert a.content_digest() != b.content_digest()
+    assert a.content_digest() == default_grid_config().content_digest()
+
+
+# ---- CLI resolution --------------------------------------------------
+
+def _grid_cli(argv, tmp_path=None, config=None):
+    base = default_grid_config()
+    flags = derive_flags(ExperimentConfig,
+                         ("taskset.seed", "taskset.n_per_point",
+                          "engine.sim_check", "policy.heuristics"),
+                         aliases={"taskset.n_per_point": "--n"})
+    ap = argparse.ArgumentParser()
+    add_flags(ap, flags, base)
+    if config is not None:
+        path = str(tmp_path / "c.json")
+        config.save(path)
+        argv = ["--config", path] + argv
+    args = ap.parse_args(argv)
+    return resolve_config(base, args, flags, expected_kind="grid")
+
+
+def test_cli_flag_overrides_base():
+    cfg = _grid_cli(["--seed", "5", "--n", "3"])
+    assert cfg.taskset.seed == 5 and cfg.taskset.n_per_point == 3
+
+
+def test_cli_file_overrides_base_flag_overrides_file(tmp_path):
+    filecfg = default_grid_config().merged(
+        {"taskset": {"seed": 9, "n_per_point": 11}})
+    cfg = _grid_cli(["--seed", "5"], tmp_path, filecfg)
+    assert cfg.taskset.seed == 5          # explicit flag wins
+    assert cfg.taskset.n_per_point == 11  # file overlay survives
+    # and untouched fields still come from the base preset
+    assert cfg.engine.cycles == default_grid_config().engine.cycles
+
+
+def test_cli_tuple_flag_parses_comma_list():
+    cfg = _grid_cli(["--heuristics", "ffd,intfaware"])
+    assert cfg.policy.heuristics == ("ffd", "intfaware")
+
+
+def test_cli_wrong_kind_rejected(tmp_path):
+    with pytest.raises(ConfigurationError) as ei:
+        _grid_cli([], tmp_path, default_sweep_config())
+    assert "kind" in str(ei.value)
+
+
+def test_unset_sentinel_means_not_passed():
+    base = default_grid_config()
+    flags = derive_flags(ExperimentConfig, ("taskset.seed",))
+    ap = argparse.ArgumentParser()
+    add_flags(ap, flags, base)
+    args = ap.parse_args([])
+    assert getattr(args, flags[0].dest) is UNSET
+    assert resolve_config(base, args, flags) == base
+
+
+# ---- checked-in canonical configs -----------------------------------
+
+def test_checked_in_configs_parse_and_match_kind():
+    files = sorted(glob.glob(os.path.join(CONFIG_DIR, "*.json")))
+    assert len(files) >= 7
+    for path in files:
+        cfg = ExperimentConfig.load(path)
+        assert cfg.kind in ("grid", "sweep", "bench_sim",
+                            "bench_executor", "bench_faults"), path
+        # digest is pure content: reload -> identical digest
+        assert cfg.content_digest() == \
+            ExperimentConfig.load(path).content_digest()
+
+
+def test_grid_smoke_config_equals_smoke_expansion():
+    """configs/experiments/grid_smoke.json is the --smoke expansion
+    written out explicitly (modulo name/output.out), so a --smoke run
+    and a config-file run resolve to the same experiment."""
+    path = os.path.join(CONFIG_DIR, "grid_smoke.json")
+    filecfg = ExperimentConfig.load(path)
+    expanded = default_grid_config().merged(GRID_SMOKE_OVERRIDES).merged(
+        {"smoke": False, "name": filecfg.name,
+         "output": {"out": filecfg.output.out}})
+    assert filecfg == expanded
+    assert filecfg.content_digest() == expanded.content_digest()
+
+
+# ---- end-to-end: grid --config == legacy flags ----------------------
+
+def test_grid_config_run_matches_legacy_flags(tmp_path):
+    from repro.vgang.grid import main as grid_main
+
+    def rows(out_dir):
+        out = {}
+        for p in sorted(glob.glob(os.path.join(out_dir, "grid_*.json"))):
+            with open(p) as fh:
+                data = json.load(fh)
+            out[os.path.basename(p)] = [
+                {k: v for k, v in r.items() if not k.startswith("wall")}
+                for r in data["rows"]]
+        return out
+
+    legacy = str(tmp_path / "legacy")
+    conf = str(tmp_path / "conf")
+    argv = ["--cores", "4", "--dists", "mixed", "--utils", "0.8",
+            "--n", "4", "--heuristics", "ffd,intfaware",
+            "--sim-check", "1"]
+    grid_main(argv + ["--out", legacy])
+
+    cfgpath = str(tmp_path / "grid.json")
+    default_grid_config().merged({
+        "taskset": {"cores": [4], "dists": ["mixed"], "utils": [0.8],
+                    "n_per_point": 4},
+        "policy": {"heuristics": ["ffd", "intfaware"]},
+        "engine": {"sim_check": 1},
+        "output": {"out": conf},
+    }).save(cfgpath)
+    grid_main(["--config", cfgpath])
+
+    assert rows(legacy) == rows(conf)
+    with open(os.path.join(conf, "summary.json")) as fh:
+        summary = json.load(fh)
+    assert summary["config_digest"] == \
+        ExperimentConfig.load(cfgpath).content_digest()
+    assert summary["config"]["taskset"]["n_per_point"] == 4
+
+
+# ---- unknown-key rejection at the engine boundary (satellite) -------
+
+def test_simulator_rejects_unknown_kwargs():
+    from repro.core.gang import RTTask
+    from repro.core.sim import Simulator
+    t = RTTask("t", wcet=1.0, period=10.0, cores=(0,), prio=1)
+    with pytest.raises(TypeError) as ei:
+        Simulator(1, [t], typo_option=True)
+    msg = str(ei.value)
+    assert "typo_option" in msg and "valid options" in msg
+
+
+def test_vgang_policy_rejects_unknown_kwargs():
+    from repro.core.gang import RTTask
+    from repro.vgang.formation import singleton_vgangs
+    from repro.vgang.sched import VirtualGangPolicy
+    t = RTTask("t", wcet=1.0, period=10.0, cores=(0,), prio=1)
+    with pytest.raises(TypeError) as ei:
+        VirtualGangPolicy(1, singleton_vgangs([t]), reclam=True)
+    msg = str(ei.value)
+    assert "reclam" in msg and "valid options" in msg
+
+
+def test_grid_cell_payload_rejects_unknown_fields():
+    from repro.vgang.grid import GridCell
+    with pytest.raises(TypeError):
+        GridCell(seed=0, n_cores=4, dist="mixed", util=0.8, n_sets=1,
+                 heuristics=("ffd",), rtg=False, rtg_dr=False,
+                 sim_check=0, gamma=0.5, cycles=20.0, bogus=1)

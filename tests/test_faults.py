@@ -25,7 +25,7 @@ from repro.core.faults import (BeOverrun, Enforcement, FaultPlan,
 from repro.core.gang import BETask, RTTask, validate_declared
 from repro.core.sim import Simulator
 from repro.vgang.formation import VirtualGang, singleton_vgangs
-from repro.vgang.grid import _dispatch, _skipped_row
+from repro.vgang.grid import GridCell, _dispatch, _skipped_row
 from repro.vgang.rta import schedulable_vgangs_enforced
 from repro.vgang.sched import VirtualGangPolicy
 
@@ -348,12 +348,13 @@ def test_executor_watchdog_aborts_hung_member():
 # grid hardening
 # ---------------------------------------------------------------------
 
-_CELL = (0, 4, "uniform", 0.5, 1, ("intfaware",), False, False, 0, 2.0,
-         None)
+_CELL = GridCell(seed=0, n_cores=4, dist="uniform", util=0.5, n_sets=1,
+                 heuristics=("intfaware",), rtg=False, rtg_dr=False,
+                 sim_check=0, gamma=2.0, cycles=20.0)
 
 
 def _ok_worker(cell):
-    return {"n_cores": cell[1], "dist": cell[2], "util": cell[3],
+    return {"n_cores": cell.n_cores, "dist": cell.dist, "util": cell.util,
             "n": 1, "accept": {}, "sim_accept": {}, "sim_n": 0,
             "soundness_violations": 0, "mean_util_gain": 0.0,
             "wall_s": 0.0}

@@ -397,7 +397,9 @@ def test_vgang_grid_smoke(tmp_path):
                     heuristics=("rtgang", "ffd"), n_per_cell=2,
                     sim_check=0, processes=1, out_dir=str(tmp_path))
     assert set(out2["results"][0]["accept"]) == {"rtgang", "ffd"}
-    with pytest.raises(ValueError, match="unknown heuristics"):
+    # rejected when the synthesized ExperimentConfig validates the
+    # policy stack (field-path ConfigurationError, a ValueError)
+    with pytest.raises(ValueError, match="unknown policy column"):
         run_grid(cores=(4,), dists=("mixed",), utils=(0.8,),
                  heuristics=("nope",), n_per_cell=1, sim_check=0,
                  processes=1, out_dir=str(tmp_path))
