@@ -59,12 +59,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gang import RTTask
-from repro.vgang.formation import (VirtualGang, assign_priorities,
-                                   interference_aware,
-                                   intensity_interference,
-                                   rtg_sibling_budget, singleton_vgangs)
-from repro.vgang.rta import schedulable_rtg_throttle, schedulable_vgangs
-from repro.vgang.sched import VirtualGangPolicy
+from repro.vgang.family import get_family
+from repro.vgang.formation import (intensity_interference,
+                                   rtg_sibling_budget)
 from repro.core.executor import BEJob
 from repro.obs.metrics import MetricsRegistry
 
@@ -108,6 +105,19 @@ MEMBERS = {
 SIBLING_BYTES = {"cam": 4e6, "lidar": 3e6, "imu": 1e6,
                  "dnn": 3e6, "plan": 3e6}
 BE_BYTES = 5e5                # filler quantum traffic
+
+# bench mode -> registry policy family (vgang/family.py). The three
+# vgang modes share one formed object via the families' common
+# "intfaware" form_key, exactly like the grid.
+MODE_FAMILY = {"solo": "rtgang", "vgang": "intfaware",
+               "rtgT": "rtgT", "rtgT+dr": "rtgT+dr"}
+# rtgT+dr deliberately keeps the *static* rtgT pricing: the reclaim
+# bound's guaranteed donations assume donor-lane quota is unspent,
+# which this workload's BE fillers (charging the same lane caps)
+# violate; the static bound stays sound under the reclaiming dispatch
+# (exchange gate, DESIGN.md §7.5), so it is the right yardstick with
+# fillers present.
+PRICING_FAMILY = {"rtgT+dr": "rtgT"}
 
 
 def make_step(n: int):
@@ -186,22 +196,20 @@ def instrumented(name, step, ctx):
 
 
 def run_mode(mode, vgangs, steps, intf, duration_s, be_bytes=BE_BYTES):
-    policy = VirtualGangPolicy(vgangs, n_cores=N_LANES,
-                               interference=intf, auto_prio=False,
-                               rtg_throttle=mode.startswith("rtgT"),
-                               reclaim=mode.endswith("+dr"))
+    fam = get_family(MODE_FAMILY[mode])
+    policy = fam.make_policy(vgangs, N_LANES, intf)
     ctx = {"ex": None, "invariant_violations": 0,
            "budget_violations": 0, "free_lane": N_LANES - 1,
            "gang_of": {}}
     for vg in policy.vgangs:
         floor = min(m.mem_budget for m in vg.members)
-        if mode.startswith("rtgT"):
+        if fam.throttled:
             floor = min(floor, rtg_sibling_budget(vg, intf, INTERVAL_S))
         for m in vg.members:
             ctx["gang_of"][m.name] = (vg.prio, vg.width, floor)
     fns = {name: instrumented(name, step, ctx)
            for name, step in steps.items()}
-    bpq = dict(SIBLING_BYTES) if mode.startswith("rtgT") else None
+    bpq = dict(SIBLING_BYTES) if fam.throttled else None
     ex = policy.build_executor(fns, regulation_interval_s=INTERVAL_S,
                                bytes_per_quantum=bpq,
                                metrics=MetricsRegistry())
@@ -217,16 +225,13 @@ def run_mode(mode, vgangs, steps, intf, duration_s, be_bytes=BE_BYTES):
 
 
 def bounds_for(mode, policy, intf, b_ms):
-    if mode.startswith("rtgT"):
-        # rtgT+dr deliberately keeps the *static* pricing: the reclaim
-        # bound's guaranteed donations assume donor-lane quota is
-        # unspent, which this workload's BE fillers (charging the same
-        # lane caps) violate; the static bound stays sound under the
-        # reclaiming dispatch (exchange gate, DESIGN.md §7.5), so it is
-        # the right yardstick with fillers present.
-        rta = schedulable_rtg_throttle(policy.vgangs, intf,
-                                       interval=INTERVAL_MS,
-                                       blocking=b_ms)
+    # the family whose analytic bound prices this mode — PRICING_FAMILY
+    # redirects rtgT+dr to the static rtgT bound (see the comment at
+    # its definition)
+    fam = get_family(PRICING_FAMILY.get(mode, MODE_FAMILY[mode]))
+    rta = fam.bounds(policy.vgangs, intf, interval=INTERVAL_MS,
+                     blocking=b_ms)
+    if fam.throttled:
         # executor admission is quantum-grained and the wall-clock
         # regulator's windows are not phase-locked to releases: one
         # window of quantization (a partially-fitting quantum the
@@ -234,7 +239,6 @@ def bounds_for(mode, policy, intf, b_ms):
         # one window of release-vs-window phase misalignment
         slop = 2.0 * INTERVAL_MS
     else:
-        rta = schedulable_vgangs(policy.vgangs, intf, blocking=b_ms)
         slop = 0.0
     out = {}
     for vg in policy.vgangs:
@@ -292,15 +296,19 @@ def main():
     # allowance (OS wakeup latency is outside the task model)
     b_ms = max(wcet_ms.values()) + 5.0 + cfg.jitter_ms
 
-    formed = assign_priorities(interference_aware(tasks, N_LANES, intf))
-    assert len(formed) == 3, [vg.name for vg in formed]
-    modes = {
-        "solo": assign_priorities(singleton_vgangs(tasks)),
-        "vgang": formed,
-        "rtgT": formed,
-    }
+    mode_names = ["solo", "vgang", "rtgT"]
     if cfg.policy.reclaim:
-        modes["rtgT+dr"] = formed
+        mode_names.append("rtgT+dr")
+    # one formation per form_key: vgang/rtgT/rtgT+dr all analyze and
+    # dispatch the *identical* intfaware formed object
+    formed_of_key, modes = {}, {}
+    for mode in mode_names:
+        fam = get_family(MODE_FAMILY[mode])
+        if fam.form_key not in formed_of_key:
+            formed_of_key[fam.form_key] = fam.assign(
+                fam.form(tasks, N_LANES, intf))
+        modes[mode] = formed_of_key[fam.form_key]
+    assert len(modes["vgang"]) == 3, [vg.name for vg in modes["vgang"]]
     plan_period_s = max(t.period for t in tasks) * 1e-3
     duration = cfg.duration_s or max(
         (1.2 if cfg.smoke else 2.5), (6 if cfg.smoke else 12)

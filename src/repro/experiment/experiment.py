@@ -36,12 +36,16 @@ from typing import Optional, Tuple
 from repro.experiment.config import Config, ConfigurationError
 
 # policy-column names the grid understands beyond the formation
-# heuristics proper (kept in sync with vgang/grid.py's column handling)
+# heuristics proper.  The authoritative set is the PolicyFamily registry
+# (vgang/family.py) — PolicyStackConfig.validate consults it lazily so a
+# registry-added family is accepted here without a parallel edit; this
+# static tuple mirrors the built-ins for import-light callers.
 RTG_COLUMN = "rtgT"
 RECLAIM_COLUMN = "rtgT+dr"
+PART_COLUMN = "part"
 FORMATION_HEURISTICS = ("ffd", "bestfit", "intfaware")
 KNOWN_COLUMNS = ("rtgang",) + FORMATION_HEURISTICS \
-    + (RTG_COLUMN, RECLAIM_COLUMN)
+    + (RTG_COLUMN, RECLAIM_COLUMN, PART_COLUMN)
 
 WIDTH_DIST_NAMES = ("light", "mixed", "heavy", "uniform")
 
@@ -102,7 +106,8 @@ class PolicyStackConfig(Config):
     """Which policy columns/modes run, and the dispatch flag bundle."""
 
     heuristics: Tuple[str, ...] = ("ffd", "bestfit", "intfaware",
-                                   RTG_COLUMN, RECLAIM_COLUMN)
+                                   RTG_COLUMN, RECLAIM_COLUMN,
+                                   PART_COLUMN)
     rtg_throttle: bool = False      # mode surfaces (executor bench)
     reclaim: bool = False           # requires rtg_throttle
     enforcement: Optional[str] = None          # None | abort | demote |
@@ -110,11 +115,16 @@ class PolicyStackConfig(Config):
     watchdog_factor: Optional[float] = None
 
     def validate(self):
+        # the PolicyFamily registry (vgang/family.py) is the one source
+        # of truth for valid columns; imported lazily to keep config
+        # loading import-light and cycle-free
+        from repro.vgang.family import family_names
+        known = family_names()
         for h in self.heuristics:
-            if h not in KNOWN_COLUMNS:
+            if h not in known:
                 raise ConfigurationError(
                     f"unknown policy column {h!r}; known: "
-                    f"{list(KNOWN_COLUMNS)}", "heuristics")
+                    f"{list(known)}", "heuristics")
         if self.reclaim and not self.rtg_throttle:
             raise ConfigurationError(
                 "dynamic reclaiming donates sibling window quota, which "
@@ -256,7 +266,7 @@ GRID_SMOKE_OVERRIDES = {
     "taskset": {"cores": [4], "dists": ["mixed"], "utils": [0.8, 1.6],
                 "n_per_point": 10},
     "policy": {"heuristics": ["ffd", "intfaware", RTG_COLUMN,
-                              RECLAIM_COLUMN]},
+                              RECLAIM_COLUMN, PART_COLUMN]},
     "engine": {"sim_check": 1},
 }
 

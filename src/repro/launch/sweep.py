@@ -145,8 +145,7 @@ def taskset_seed(seed: int, k: int, total_util: float) -> int:
     return seed + 7919 * k + int(1e6 * total_util)
 
 
-def _sched_level(args: Tuple[int, int, int, float, float, int, int]
-                 ) -> List[Dict]:
+def _sched_level(args: Tuple) -> List[Dict]:
     """Pool worker: one contiguous shard of a utilization level's
     tasksets in one process (ROADMAP item 4 — interpreter startup and
     import cost amortized over the shard, not paid per taskset).
@@ -158,12 +157,20 @@ def _sched_level(args: Tuple[int, int, int, float, float, int, int]
     (``analysis.batched_rta``, DESIGN.md §13) in one call — bit-identical
     to the scalar per-taskset ``schedulable`` loop, which stays
     reachable via the ``scalar_rta`` shard flag (``--scalar-rta``).
-    Sims run trace-free: the sweep only reads SimResult counters."""
+    Sims run trace-free: the sweep only reads SimResult counters.
+
+    Optional trailing args extend the payload tuple backwards-
+    compatibly: ``scalar_rta``, then ``gamma`` and a ``heuristics``
+    tuple of PolicyFamily names (vgang/family.py) — each named family
+    forms the shard's tasksets and contributes its own batched
+    acceptance bit per taskset (``family_ok``)."""
     from repro.core.rta import schedulable
     from repro.core.sim import Simulator
 
     seed, n_cores, n_tasks, total_util, cycles, k0, k1, *rest = args
     scalar_rta = bool(rest[0]) if rest else False
+    gamma = float(rest[1]) if len(rest) > 1 else 0.5
+    heuristics = tuple(rest[2]) if len(rest) > 2 else ()
     seeds = [taskset_seed(seed, k, total_util) for k in range(k0, k1)]
     # each taskset gets its own rng seeded from the absolute index, so
     # drawing the whole shard up front cannot perturb the streams
@@ -175,31 +182,50 @@ def _sched_level(args: Tuple[int, int, int, float, float, int, int]
     else:
         from repro.analysis.batched_rta import batched_accepts
         rta_bits = batched_accepts(tasksets)
+    fam_bits: Dict[str, List[bool]] = {}
+    if heuristics:
+        from repro.vgang.family import get_family
+        from repro.vgang.formation import intensity_interference
+        intfs = [intensity_interference(ts, gamma) for ts in tasksets]
+        for h in heuristics:
+            fam = get_family(h)
+            formed_sets = [fam.assign(fam.form(ts, n_cores, intf))
+                           for ts, intf in zip(tasksets, intfs)]
+            if scalar_rta:
+                fam_bits[h] = [bool(fam.verdict(f, i))
+                               for f, i in zip(formed_sets, intfs)]
+            else:
+                fam_bits[h] = fam.batched_verdict(formed_sets, intfs)
     out = []
-    for s, tasks, rta_ok in zip(seeds, tasksets, rta_bits):
+    for j, (s, tasks, rta_ok) in enumerate(zip(seeds, tasksets, rta_bits)):
         horizon = cycles * max(t.period for t in tasks)
         t0 = time.time()
         r = Simulator(n_cores, tasks, dt=None, trace=False).run(horizon)
-        out.append({
+        row = {
             "seed": s,
             "util": total_util,
             "sim_ok": sum(r.deadline_misses.values()) == 0,
             "rta_ok": rta_ok,
             "events": r.events,
             "wall_s": time.time() - t0,
-        })
+        }
+        if heuristics:
+            row["family_ok"] = {h: bool(fam_bits[h][j])
+                                for h in heuristics}
+        out.append(row)
     return out
 
 
 def _sweep_config(n_cores, n_tasks, utils, n_per_util, cycles, processes,
-                  seed, scalar_rta, out=None):
+                  seed, scalar_rta, out=None, heuristics=(), gamma=0.5):
     """The resolved ExperimentConfig a direct ``schedulability_sweep``
     call denotes (provenance parity with the CLI shell)."""
     from repro.experiment import default_sweep_config
     return default_sweep_config().merged({
         "taskset": {"cores": [n_cores], "n_tasks": n_tasks,
                     "utils": list(utils), "n_per_point": n_per_util,
-                    "seed": seed},
+                    "seed": seed, "gamma": gamma},
+        "policy": {"heuristics": list(heuristics)},
         "engine": {"cycles": cycles, "processes": processes or 0,
                    "scalar_rta": scalar_rta},
         "output": {"out": out},
@@ -211,24 +237,46 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
                          n_per_util: int = 100, cycles: float = 20.0,
                          processes: Optional[int] = None,
                          seed: int = 0, scalar_rta: bool = False,
+                         heuristics: Sequence[str] = (),
+                         gamma: float = 0.5,
                          config=None) -> Dict:
     """Run ``n_per_util`` random tasksets per utilization level in
     batched shard workers (a few shards per level — enough to use every
     core, orders of magnitude fewer process tasks than one per taskset),
     aggregating acceptance ratios (simulated + RTA) in the parent.
 
+    ``heuristics`` names PolicyFamilies (vgang/family.py) to score
+    alongside the plain gang RTA: each family forms every taskset and
+    contributes a ``family_sched_ratio`` column. Families that require
+    window-aligned zero-offset releases (the rtgT pricings) are
+    rejected — the sweep draws random release offsets by design.
+
     ``config`` is the resolved ExperimentConfig this run realizes (the
     CLI shell passes it down; one is synthesized for direct calls), and
     its content digest is stamped into the output dict."""
+    heuristics = tuple(heuristics)
+    if heuristics:
+        from repro.vgang.family import family_names, get_family
+        for h in heuristics:
+            fam = get_family(h)
+            if fam.aligned_releases_only:
+                valid = [n for n in family_names()
+                         if not get_family(n).aligned_releases_only]
+                raise ValueError(
+                    f"policy family {h!r} needs window-aligned "
+                    f"zero-offset releases, but the sweep draws random "
+                    f"release offsets — run it on the grid instead "
+                    f"(families valid here: {valid})")
     if config is None:
         config = _sweep_config(n_cores, n_tasks, utils, n_per_util,
-                               cycles, processes, seed, scalar_rta)
+                               cycles, processes, seed, scalar_rta,
+                               heuristics=heuristics, gamma=gamma)
     procs = max(1, processes or min(multiprocessing.cpu_count(), 16))
     shards_per_level = max(1, -(-procs // max(1, len(utils))))
     shards_per_level = min(shards_per_level, n_per_util)
     step = -(-n_per_util // shards_per_level)
     levels = [(seed, n_cores, n_tasks, u, cycles, k0,
-               min(k0 + step, n_per_util), scalar_rta)
+               min(k0 + step, n_per_util), scalar_rta, gamma, heuristics)
               for u in utils for k0 in range(0, n_per_util, step)]
     procs = min(procs, len(levels))
     if procs > 1:
@@ -243,14 +291,19 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
     rows = []
     for u in utils:
         rs = by_util[u]
-        rows.append({
+        row = {
             "util": u,
             "n": len(rs),
             "sim_sched_ratio": sum(r["sim_ok"] for r in rs) / len(rs),
             "rta_sched_ratio": sum(r["rta_ok"] for r in rs) / len(rs),
             "events_total": sum(r["events"] for r in rs),
             "wall_s_total": round(sum(r["wall_s"] for r in rs), 3),
-        })
+        }
+        if heuristics:
+            row["family_sched_ratio"] = {
+                h: sum(r["family_ok"][h] for r in rs) / len(rs)
+                for h in heuristics}
+        rows.append(row)
     return {"n_cores": n_cores, "n_tasks": n_tasks, "cycles": cycles,
             "processes": procs, "seed": seed,
             "config": config.to_dict(),
@@ -262,7 +315,8 @@ def schedulability_sweep(n_cores: int = 4, n_tasks: int = 4,
 SWEEP_FLAG_PATHS = (
     "taskset.utils", "taskset.n_per_point", "taskset.n_tasks",
     "taskset.cores", "engine.cycles", "engine.processes", "taskset.seed",
-    "engine.scalar_rta", "output.out")
+    "engine.scalar_rta", "policy.heuristics", "taskset.gamma",
+    "output.out")
 SWEEP_FLAG_ALIASES = {"taskset.n_per_point": "--n",
                       "taskset.n_tasks": "--tasks",
                       "engine.processes": "--procs"}
@@ -279,10 +333,15 @@ def run_schedulability(cfg) -> None:
         utils=cfg.taskset.utils, n_per_util=cfg.taskset.n_per_point,
         cycles=cfg.engine.cycles,
         processes=cfg.engine.processes or None, seed=cfg.taskset.seed,
-        scalar_rta=cfg.engine.scalar_rta, config=cfg)
+        scalar_rta=cfg.engine.scalar_rta,
+        heuristics=cfg.policy.heuristics, gamma=cfg.taskset.gamma,
+        config=cfg)
     for row in out["rows"]:
+        fams = "".join(f" {h}={v:.2f}"
+                       for h, v in row.get("family_sched_ratio",
+                                           {}).items())
         print(f"util={row['util']:.2f} sim={row['sim_sched_ratio']:.2f} "
-              f"rta={row['rta_sched_ratio']:.2f} n={row['n']} "
+              f"rta={row['rta_sched_ratio']:.2f}{fams} n={row['n']} "
               f"({row['events_total']} events in {row['wall_s_total']}s)")
     path = cfg.output.out or os.path.join(ROOT, "results",
                                           "sched_sweep.json")

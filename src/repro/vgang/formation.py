@@ -42,11 +42,48 @@ singleton baseline = plain RT-Gang):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.gang import RTTask
 from repro.core.rta import gang_wcet
 from repro.core.sim import PairwiseInterference, no_interference
+
+
+def pair_factor(interference: PairwiseInterference,
+                victim: str, aggressor: str,
+                victim_cores: Optional[Sequence[int]] = None,
+                aggressor_cores: Optional[Sequence[int]] = None) -> float:
+    """Worst-case pairwise slowdown factor, placement-aware when the
+    model is.
+
+    Location-free models are called exactly as before —
+    ``interference(victim, aggressor)`` — so every existing verdict is
+    bit-identical. A ``distance_interference``-decorated model
+    (core/memmodel.py, ``fn.distance_aware``) takes the core distance as
+    a third argument; the analysis must then price the worst pair over
+    the two units' core placements, matching the per-(victim, core)
+    slowdown the MemoryModel applies at runtime."""
+    if getattr(interference, "distance_aware", False):
+        if not victim_cores or not aggressor_cores:
+            raise ValueError(
+                "distance-aware interference model needs core placements "
+                "for both the victim and the aggressor")
+        return max(interference(victim, aggressor, abs(v - a))
+                   for v in victim_cores for a in aggressor_cores)
+    return interference(victim, aggressor)
+
+
+def member_core_blocks(members: Sequence[RTTask]) -> Dict[str, tuple]:
+    """Member name -> consecutive core block, mirroring the layout
+    ``sched.remap_members`` dispatches (cursor from core 0, members in
+    list order). This is the placement the placement-aware analysis
+    prices."""
+    blocks: Dict[str, tuple] = {}
+    cursor = 0
+    for m in members:
+        blocks[m.name] = tuple(range(cursor, cursor + m.n_threads))
+        cursor += m.n_threads
+    return blocks
 
 
 @dataclasses.dataclass
@@ -81,13 +118,25 @@ class VirtualGang:
                       ) -> float:
         """C_v: the gang runs until its slowest member finishes, each
         member slowed by the worst pairwise factor over co-members —
-        the same max-of-pairwise model the simulator engines apply."""
+        the same max-of-pairwise model the simulator engines apply.
+
+        Distance-aware models are priced over the consecutive core
+        blocks ``sched.remap_members`` will dispatch; location-free
+        models take the exact pre-existing call path."""
+        blocks = (member_core_blocks(self.members)
+                  if getattr(interference, "distance_aware", False)
+                  else None)
         worst = 0.0
         for m in self.members:
             slow = 1.0
             for o in self.members:
                 if o is not m:
-                    slow = max(slow, interference(m.name, o.name))
+                    if blocks is None:
+                        slow = max(slow, interference(m.name, o.name))
+                    else:
+                        slow = max(slow, pair_factor(
+                            interference, m.name, o.name,
+                            blocks[m.name], blocks[o.name]))
             worst = max(worst, gang_wcet(m) * slow)
         return worst
 
@@ -126,11 +175,20 @@ def critical_member(vg: VirtualGang,
     bounds the virtual gang's WCET — the bottleneck whose timing the
     sibling regulation protects. Ties break by name (deterministic
     across the policy, the RTA and the evaluation grid)."""
+    blocks = (member_core_blocks(vg.members)
+              if getattr(interference, "distance_aware", False)
+              else None)
+
     def key(m: RTTask):
         slow = 1.0
         for o in vg.members:
             if o is not m:
-                slow = max(slow, interference(m.name, o.name))
+                if blocks is None:
+                    slow = max(slow, interference(m.name, o.name))
+                else:
+                    slow = max(slow, pair_factor(
+                        interference, m.name, o.name,
+                        blocks[m.name], blocks[o.name]))
         return (-gang_wcet(m) * slow, m.name)
     return min(vg.members, key=key)
 
@@ -337,3 +395,109 @@ def assign_priorities(vgangs: Sequence[VirtualGang]) -> List[VirtualGang]:
     for rank, vg in enumerate(order):
         out.append(dataclasses.replace(vg, prio=len(order) - rank))
     return out
+
+
+# --------------------------------------------------------------------------
+# Strict partitioning (arXiv:2403.10726): instead of merging gangs into
+# virtual gangs and inflating WCETs, carve the machine into static,
+# disjoint core partitions and bin-pack whole gangs into them. Gangs of
+# one partition never co-run (each occupies its whole partition while
+# executing), so intra-partition interference vanishes and the analysis
+# collapses to classic uniprocessor fixed-priority RTA per partition —
+# while the partitions themselves run concurrently, paying only the
+# cross-partition interference inflation.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Partition:
+    """A static block of cores and the gangs pinned to it."""
+    name: str
+    cores: Tuple[int, ...]
+    gangs: List[RTTask]
+
+    @property
+    def size(self) -> int:
+        return len(self.cores)
+
+    def utilization(self) -> float:
+        """Plain (uninflated) uniprocessor-equivalent utilization."""
+        return sum(gang_wcet(g) / g.period for g in self.gangs)
+
+
+@dataclasses.dataclass
+class Partitioning:
+    """A strict partitioning of the machine: disjoint consecutive core
+    blocks, every gang assigned to exactly one."""
+    n_cores: int
+    partitions: List[Partition]
+
+    @property
+    def gangs(self) -> List[RTTask]:
+        return [g for p in self.partitions for g in p.gangs]
+
+
+def strict_partition(tasks: Sequence[RTTask], n_cores: int,
+                     interference: PairwiseInterference = no_interference
+                     ) -> Partitioning:
+    """Bin-pack gangs into static core partitions (arXiv:2403.10726).
+
+    Deterministic worst-fit decreasing: gangs sorted by (width desc,
+    utilization desc, name) each go to the feasible option — an existing
+    partition at least as wide as the gang, or a new partition carved
+    from the remaining cores — that leaves the target partition least
+    loaded. While spare cores remain this opens new partitions (maximal
+    parallelism); once the machine is carved up, the remaining gangs
+    balance load across the partitions wide enough to host them.
+
+    Priorities are global rate-monotonic (period, name) — distinct
+    everywhere, hence valid locally within each partition. Core blocks
+    are consecutive, so a distance-aware interference model prices
+    cross-partition pairs over real placements (``pair_factor``).
+
+    The ``interference`` argument is accepted for signature parity with
+    the virtual-gang heuristics; packing itself needs no factors because
+    intra-partition interference is structurally zero.
+    """
+    del interference  # intra-partition interference is zero by design
+    order = sorted(tasks, key=lambda t: (-t.n_threads,
+                                         -gang_wcet(t) / t.period,
+                                         t.name))
+    bins: List[Tuple[int, List[RTTask]]] = []   # (size, members)
+    used = 0
+    for t in order:
+        w = t.n_threads
+        if w > n_cores:
+            raise ValueError(
+                f"gang {t.name!r} is wider ({w}) than the machine "
+                f"({n_cores} cores)")
+        u = gang_wcet(t) / t.period
+        options = []
+        for i, (size, members) in enumerate(bins):
+            if w <= size:
+                load = sum(gang_wcet(m) / m.period for m in members)
+                options.append((load + u, 1, i))
+        if used + w <= n_cores:
+            # a fresh partition is always the least-loaded option; the
+            # flag 0 prefers it on (impossible in practice) ties
+            options.append((u, 0, len(bins)))
+        _, is_existing, i = min(options)
+        if is_existing:
+            bins[i][1].append(t)
+        else:
+            bins.append((w, [t]))
+            used += w
+    # global RM priorities, distinct via name tiebreak
+    ranked = sorted((g for _, members in bins for g in members),
+                    key=lambda g: (g.period, g.name))
+    prio_of = {g.uid: len(ranked) - r for r, g in enumerate(ranked)}
+    partitions: List[Partition] = []
+    cursor = 0
+    for idx, (size, members) in enumerate(bins):
+        cores = tuple(range(cursor, cursor + size))
+        cursor += size
+        gangs = [dataclasses.replace(g, prio=prio_of[g.uid])
+                 for g in members]
+        partitions.append(Partition(name=f"P{idx}", cores=cores,
+                                    gangs=gangs))
+    return Partitioning(n_cores=n_cores, partitions=partitions)

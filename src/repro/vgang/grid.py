@@ -24,6 +24,15 @@ Grid axes:
   min(static, reclaim_wcet) — the exchange gate keeps the static bound
   sound under donation, so this column dominates ``rtgT`` at every
   utilization level while recovering part of the isolation cost.
+  ``part`` is strict partitioning (arXiv:2403.10726, DESIGN.md §15):
+  gangs bin-packed into static core partitions, priced by
+  partition-local uniprocessor RTA with cross-partition inflation —
+  a structurally different answer to the same underutilization
+  problem, interesting exactly where it crosses ``rtgT+dr``.
+
+Every policy column is a ``PolicyFamily`` from the registry
+(vgang/family.py); this module only iterates whatever families the
+requested column labels name.
 
 Per (M, dist, util) cell — one batched worker process per cell, like the
 per-level batching of launch/sweep.py --schedulability — n random
@@ -62,21 +71,12 @@ from repro.experiment import (ExperimentConfig, GRID_SMOKE_OVERRIDES,
                               derive_flags)
 from repro.launch.sweep import ROOT, taskset_seed, uunifast
 from repro.obs.margins import merge_margins, overall
-from repro.vgang.formation import (HEURISTICS, assign_priorities,
-                                   intensity_interference, singleton_vgangs,
-                                   total_vgang_utilization)
-from repro.vgang.rta import (accepts, accepts_rtg_throttle, batched_accepts,
-                             batched_accepts_rtg_throttle)
-from repro.vgang.sched import VirtualGangPolicy
-
-# RTG-throttle policy column: interference-aware formation dispatched
-# with per-member regulation (VirtualGangPolicy(rtg_throttle=True)) and
-# priced by the per-window duty-cycle RTA (rta.accepts_rtg_throttle) —
-# not a formation heuristic, so it is handled apart from HEURISTICS
-RTG_COLUMN = "rtgT"
-# ... and the same dispatch with dynamic reclaiming (policy reclaim=True,
-# RTA reclaim=True): mid-window donation of completed siblings' quota
-RECLAIM_COLUMN = "rtgT+dr"
+# re-exported for the pre-registry import sites (the canonical homes of
+# the column labels are vgang/family.py and experiment.py)
+from repro.vgang.family import (BASELINE_COLUMN, PART_COLUMN,  # noqa: F401
+                                RECLAIM_COLUMN, RTG_COLUMN, get_family,
+                                grid_columns)
+from repro.vgang.formation import intensity_interference
 
 OUT_DEFAULT = os.path.join(ROOT, "results", "vgang")
 
@@ -137,9 +137,9 @@ class GridCell:
     dist: str
     util: float
     n_sets: int
-    heuristics: Tuple[str, ...]
-    rtg: bool
-    rtg_dr: bool
+    # full ordered column list (family names, vgang/family.py); must
+    # include the "rtgang" baseline — use grid_columns() to build it
+    columns: Tuple[str, ...]
     sim_check: int
     gamma: float
     cycles: float
@@ -162,13 +162,12 @@ def _grid_cell(cell: GridCell) -> Dict:
     ``sim_check`` tasksets get event-engine sim-checks (default
     ``trace=False`` — their verdicts come from the batched arrays, and
     the SimResult counters are trace-independent)."""
-    (seed, n_cores, dist, util, n_sets, heuristics, rtg, rtg_dr,
-     sim_check, gamma, cycles, scalar_rta) = (
+    (seed, n_cores, dist, util, n_sets, columns, sim_check, gamma,
+     cycles, scalar_rta) = (
         cell.seed, cell.n_cores, cell.dist, cell.util, cell.n_sets,
-        cell.heuristics, cell.rtg, cell.rtg_dr, cell.sim_check,
-        cell.gamma, cell.cycles, cell.scalar_rta)
-    columns = ("rtgang", *heuristics) + ((RTG_COLUMN,) if rtg else ()) \
-        + ((RECLAIM_COLUMN,) if rtg_dr else ())
+        cell.columns, cell.sim_check, cell.gamma, cell.cycles,
+        cell.scalar_rta)
+    fams = {h: get_family(h) for h in columns}
     sim_accept = {h: 0 for h in columns}
     margins: Dict[str, Dict] = {h: {} for h in columns}
     sim_n = 0
@@ -177,59 +176,52 @@ def _grid_cell(cell: GridCell) -> Dict:
     t0 = time.time()
     n_tasks = n_tasks_for(n_cores)
     # ---- phase 1: draw + form all n tasksets ------------------------
-    drawn: List[Tuple[List[RTTask], object, Dict[str, list]]] = []
+    drawn: List[Tuple[List[RTTask], object, Dict[str, object]]] = []
     for k in range(n_sets):
         rng = random.Random(taskset_seed(seed, k, util))
         tasks = random_vgang_taskset(rng, n_cores, n_tasks, util, dist)
         intf = intensity_interference(tasks, gamma)
-        formed = {"rtgang": singleton_vgangs(tasks)}
-        for h in heuristics:
-            formed[h] = HEURISTICS[h](tasks, n_cores, intf)
-        if rtg or rtg_dr:
-            packed = formed.get("intfaware") or \
-                HEURISTICS["intfaware"](tasks, n_cores, intf)
-            if rtg:
-                formed[RTG_COLUMN] = packed
-            if rtg_dr:
-                formed[RECLAIM_COLUMN] = packed
-        base_util = total_vgang_utilization(formed["rtgang"], intf)
-        best_util = min(total_vgang_utilization(formed[h], intf)
-                        for h in formed)
-        util_gain += base_util - best_util
-        # assign priorities once per distinct formation (rtgT and
-        # rtgT+dr share the packed intfaware formation — sharing the
-        # *assigned* vgang objects too lets the rtgT columns' static
-        # per-window bounds memoize across the two columns, which key
-        # on vgang identity)
-        assigned_of: Dict[int, list] = {}
-        for h, v in formed.items():
-            if id(v) not in assigned_of:
-                assigned_of[id(v)] = assign_priorities(v)
-            formed[h] = assigned_of[id(v)]
+        # form + assign once per distinct form_key: families sharing a
+        # formation (rtgT and rtgT+dr both analyze the packed intfaware
+        # set) share the *identical* assigned objects, so the rtgT
+        # columns' static per-window bounds memoize across the two
+        # columns (the cache keys on object identity)
+        formed_of_key: Dict[str, object] = {}
+        formed: Dict[str, object] = {}
+        for h in columns:
+            fam = fams[h]
+            got = formed_of_key.get(fam.form_key)
+            if got is None:
+                got = fam.assign(fam.form(tasks, n_cores, intf))
+                formed_of_key[fam.form_key] = got
+            formed[h] = got
+        # formation objective: utilization gain of the best packing vs
+        # the singleton baseline (families without a comparable packing
+        # objective — partition-kind — are excluded from the min)
+        utils = {h: fams[h].utilization(formed[h], intf)
+                 for h in columns if fams[h].utilization is not None}
+        util_gain += utils["rtgang"] - min(utils.values())
         drawn.append((tasks, intf, formed))
     # ---- phase 2: one shard-batched RTA call per policy column ------
     # one-gang-at-a-time: only same-vgang members ever co-run, so intf
     # only enters through each vgang's inflated WCET (and inflates
     # nothing for the rtgang singleton baseline); the rtgT column
-    # prices sibling regulation on top of that, and rtgT+dr the
-    # reclaiming dispatch (min(static, reclaim))
+    # prices sibling regulation on top of that, rtgT+dr the reclaiming
+    # dispatch (min(static, reclaim)), and part the partition-local
+    # uniprocessor RTA with cross-partition inflation
     t_rta = time.time()
     intfs = [d[1] for d in drawn]
     wcet_cache: Dict = {}
     verdicts: Dict[str, List[bool]] = {}
     for h in columns:
+        fam = fams[h]
         vsets = [d[2][h] for d in drawn]
-        is_rtg = h in (RTG_COLUMN, RECLAIM_COLUMN)
-        is_dr = h == RECLAIM_COLUMN
         if scalar_rta:
-            verdicts[h] = [
-                accepts_rtg_throttle(v, i, reclaim=is_dr) if is_rtg
-                else accepts(v, i) for v, i in zip(vsets, intfs)]
-        elif is_rtg:
-            verdicts[h] = batched_accepts_rtg_throttle(
-                vsets, intfs, reclaim=is_dr, wcet_cache=wcet_cache)
+            verdicts[h] = [bool(fam.verdict(v, i))
+                           for v, i in zip(vsets, intfs)]
         else:
-            verdicts[h] = batched_accepts(vsets, intfs)
+            verdicts[h] = fam.batched_verdict(vsets, intfs,
+                                              wcet_cache=wcet_cache)
     accept = {h: sum(verdicts[h]) for h in columns}
     wall_rta = time.time() - t_rta
     # ---- phase 3: event-engine sim-checks (trace=False) -------------
@@ -237,14 +229,9 @@ def _grid_cell(cell: GridCell) -> Dict:
         sim_n += 1
         tasks, intf, formed = drawn[k]
         for h in columns:
-            vgangs = formed[h]
-            is_rtg = h in (RTG_COLUMN, RECLAIM_COLUMN)
-            is_dr = h == RECLAIM_COLUMN
+            fam = fams[h]
             rta_ok = verdicts[h][k]
-            policy = VirtualGangPolicy(vgangs, n_cores, intf,
-                                       auto_prio=False,
-                                       rtg_throttle=is_rtg,
-                                       reclaim=is_dr)
+            policy = fam.make_policy(formed[h], n_cores, intf)
             horizon = cycles * max(t.period for t in tasks)
             # accepted sets carry per-member analytic bounds into
             # the run: measured response vs bound (DESIGN.md §12.3)
@@ -378,6 +365,31 @@ def _margin_headline(results: Sequence[Dict]) -> Dict:
             "negative": sum(m["negative"] for m in recs)}
 
 
+def _part_crossover(results: Sequence[Dict]) -> Dict:
+    """The headline comparison for the strict-partitioning column:
+    per-cell acceptance of ``part`` vs ``rtgT+dr`` — how many cells
+    each side wins and the largest gaps either way (summary.json
+    ``part_vs_reclaim``)."""
+    wins, losses = [], []
+    for r in results:
+        acc = r.get("accept")
+        if not acc or PART_COLUMN not in acc or RECLAIM_COLUMN not in acc:
+            continue
+        delta = acc[PART_COLUMN] - acc[RECLAIM_COLUMN]
+        row = {"n_cores": r["n_cores"], "dist": r["dist"],
+               "util": r["util"], PART_COLUMN: acc[PART_COLUMN],
+               RECLAIM_COLUMN: acc[RECLAIM_COLUMN],
+               "delta": round(delta, 4)}
+        if delta > 1e-12:
+            wins.append(row)
+        elif delta < -1e-12:
+            losses.append(row)
+    wins.sort(key=lambda r: -r["delta"])
+    losses.sort(key=lambda r: r["delta"])
+    return {"cells_won": len(wins), "cells_lost": len(losses),
+            "top_wins": wins[:3], "top_losses": losses[:3]}
+
+
 def _grid_config(cores, dists, utils, heuristics, n_per_cell, sim_check,
                  gamma, cycles, seed, processes, out_dir, cell_timeout,
                  scalar_rta, trace, dt) -> ExperimentConfig:
@@ -403,7 +415,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
              utils: Sequence[float] = (0.4, 0.7, 0.9, 1.0, 1.1, 1.2, 1.4,
                                        1.6, 2.0),
              heuristics: Sequence[str] = ("ffd", "bestfit", "intfaware",
-                                          RTG_COLUMN, RECLAIM_COLUMN),
+                                          RTG_COLUMN, RECLAIM_COLUMN,
+                                          PART_COLUMN),
              n_per_cell: int = 50, sim_check: int = 2, gamma: float = 0.5,
              cycles: float = 20.0, seed: int = 0,
              processes: Optional[int] = None,
@@ -425,25 +438,17 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                               sim_check, gamma, cycles, seed, processes,
                               out_dir, cell_timeout, scalar_rta, trace, dt)
     digest = config.content_digest()
-    # the singleton baseline is always evaluated under its curve label
-    # "rtgang"; accept (and drop) it here so `--heuristics rtgang,ffd`
-    # means what it reads as; "rtgT" selects the RTG-throttle policy
-    # column (interference-aware formation + member regulation) and
-    # "rtgT+dr" the same dispatch with dynamic reclaiming
-    rtg = RTG_COLUMN in heuristics
-    rtg_dr = RECLAIM_COLUMN in heuristics
-    heuristics = tuple(h for h in heuristics
-                       if h not in ("rtgang", RTG_COLUMN, RECLAIM_COLUMN))
-    unknown = [h for h in heuristics if h not in HEURISTICS]
-    if unknown:
-        raise ValueError(f"unknown heuristics {unknown}; known: rtgang, "
-                         f"{', '.join(sorted(HEURISTICS))}, {RTG_COLUMN}, "
-                         f"{RECLAIM_COLUMN}")
+    # resolve the requested labels against the family registry: the
+    # singleton baseline always leads under its curve label "rtgang"
+    # (so `--heuristics rtgang,ffd` means what it reads as), plain
+    # formation heuristics keep request order, special policy columns
+    # (rtgT, rtgT+dr, part) land last in canonical order; unknown
+    # labels raise with the registered names
+    columns = grid_columns(heuristics)
     cells = [GridCell(seed=seed, n_cores=m, dist=d, util=u,
-                      n_sets=n_per_cell, heuristics=tuple(heuristics),
-                      rtg=rtg, rtg_dr=rtg_dr, sim_check=sim_check,
-                      gamma=gamma, cycles=cycles, scalar_rta=scalar_rta,
-                      trace=trace, dt=dt)
+                      n_sets=n_per_cell, columns=columns,
+                      sim_check=sim_check, gamma=gamma, cycles=cycles,
+                      scalar_rta=scalar_rta, trace=trace, dt=dt)
              for m in cores for d in dists for u in utils]
     procs = processes or min(multiprocessing.cpu_count(), 16, len(cells))
     procs = max(1, min(procs, len(cells)))
@@ -452,9 +457,7 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
 
     summary = {"seed": seed, "gamma": gamma, "cycles": cycles,
                "n_per_cell": n_per_cell, "sim_check": sim_check,
-               "heuristics": ["rtgang", *heuristics] +
-                             ([RTG_COLUMN] if rtg else []) +
-                             ([RECLAIM_COLUMN] if rtg_dr else []),
+               "heuristics": list(columns),
                "utils": list(utils),
                "config": config.to_dict(),
                "config_digest": digest,
@@ -464,6 +467,8 @@ def run_grid(cores: Sequence[int] = (4, 8, 16),
                "skipped_cells": len(skipped),
                "wall_s": round(time.time() - t0, 3),
                "files": []}
+    if PART_COLUMN in columns and RECLAIM_COLUMN in columns:
+        summary["part_vs_reclaim"] = _part_crossover(results)
     os.makedirs(out_dir, exist_ok=True)
     for m in cores:
         for d in dists:
@@ -511,7 +516,7 @@ GRID_FLAG_PATHS = (
 GRID_FLAG_ALIASES = {"taskset.n_per_point": "--n",
                      "engine.processes": "--procs"}
 GRID_FLAG_HELPS = {
-    "smoke": "CI cell: 2 utils x 4 heuristics x 4 cores (expands to "
+    "smoke": "CI cell: 2 utils x 6 policy columns x 4 cores (expands to "
              "explicit fields, then clears itself — a --smoke run and "
              "configs/experiments/grid_smoke.json resolve to the same "
              "axes)",

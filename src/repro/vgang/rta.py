@@ -24,7 +24,8 @@ from repro.core.gang import RTTask
 from repro.core import rta as core_rta
 from repro.core.rta import gang_wcet
 from repro.core.sim import PairwiseInterference, no_interference
-from repro.vgang.formation import (VirtualGang, critical_member,
+from repro.vgang.formation import (Partitioning, VirtualGang,
+                                   critical_member, pair_factor,
                                    rtg_sibling_budget)
 
 
@@ -784,3 +785,99 @@ def batched_accepts_rtg_throttle(
     R = _bat.fixed_point(batch, blocking=blocking, crpd=crpd,
                          backend=backend)
     return _bat.accept_bits(batch, R).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Strict partitioning (arXiv:2403.10726): within a partition, gangs never
+# co-run — a gang occupies its whole partition while executing — so the
+# partition IS a uniprocessor whose tasks are the gangs with their plain
+# (uninflated) WCETs, and core/rta.py applies verbatim. Partitions run
+# concurrently, so a gang's WCET is inflated by the worst pairwise factor
+# over the gangs of *other* partitions (the MemoryModel's occupancy max
+# never exceeds that bound: present co-runners are always a subset of the
+# other partitions' gangs). A single-partition machine has no co-runners
+# at all, so the analysis collapses to core.rta.schedulable bit-for-bit
+# (the inflation factor is exactly 1.0 and C * 1.0 == C in IEEE floats).
+
+
+def _partition_rows(partitioning: Partitioning,
+                    interference: PairwiseInterference
+                    ) -> List[List[Tuple[str, float, float, float]]]:
+    """One ``(name, C', P, prio)`` row per partition: C' is the gang's
+    WCET inflated by the worst pairwise factor over all gangs of other
+    partitions (placement-aware via ``pair_factor`` when the model is
+    distance-aware — partitions are consecutive core blocks)."""
+    parts = partitioning.partitions
+    rows = []
+    for p in parts:
+        row = []
+        for g in p.gangs:
+            f = 1.0
+            for q in parts:
+                if q is p:
+                    continue
+                for o in q.gangs:
+                    f = max(f, pair_factor(interference, g.name, o.name,
+                                           p.cores, q.cores))
+            row.append((g.name, gang_wcet(g) * f, g.period,
+                        float(g.prio)))
+        rows.append(row)
+    return rows
+
+
+def schedulable_partitions(
+        partitioning: Partitioning,
+        interference: PairwiseInterference = no_interference,
+        blocking: float = 0.0) -> Dict[str, Dict]:
+    """Per-gang response times under strict partitioning, keyed by gang
+    name — same row shape as core.rta.schedulable plus the hosting
+    partition. Each partition runs the classic uniprocessor Audsley
+    fixed point (core/rta.py) over its own gangs only."""
+    out: Dict[str, Dict] = {}
+    for p, row in zip(partitioning.partitions,
+                      _partition_rows(partitioning, interference)):
+        eq = [RTTask(name=n, wcet=c, period=per, cores=(0,), prio=int(pr))
+              for n, c, per, pr in row]
+        res = core_rta.schedulable(eq, blocking=blocking)
+        for n, v in res.items():
+            v["partition"] = p.name
+            out[n] = v
+    return out
+
+
+def accepts_partitioned(
+        partitioning: Partitioning,
+        interference: PairwiseInterference = no_interference,
+        blocking: float = 0.0) -> bool:
+    """Single-bit admission verdict for the grid's ``part`` column."""
+    res = schedulable_partitions(partitioning, interference,
+                                 blocking=blocking)
+    return all(v["ok"] for v in res.values())
+
+
+def batched_accepts_partitioned(
+        partitionings: Sequence[Partitioning],
+        interferences=no_interference,
+        blocking: float = 0.0, backend: str = "auto") -> List[bool]:
+    """Shard-batched ``accepts_partitioned``: every partition of every
+    taskset becomes one lane-row of the masked batched fixed point
+    (analysis/batched_rta.py, bit-identical to core/rta.py), and a
+    taskset's bit is the AND over its partitions' rows."""
+    from repro.analysis import batched_rta as _bat
+
+    intfs = _per_set_interference(partitionings, interferences)
+    flat_rows: List[List[Tuple[str, float, float, float]]] = []
+    owners: List[int] = []
+    for s, (pg, intf) in enumerate(zip(partitionings, intfs)):
+        for row in _partition_rows(pg, intf):
+            flat_rows.append(row)
+            owners.append(s)
+    out = [True] * len(partitionings)
+    if not flat_rows:
+        return out
+    batch = _bat.pad_rows(flat_rows)
+    R = _bat.fixed_point(batch, blocking=blocking, backend=backend)
+    bits = _bat.accept_bits(batch, R).tolist()
+    for s, b in zip(owners, bits):
+        out[s] = out[s] and bool(b)
+    return out

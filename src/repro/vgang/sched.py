@@ -23,11 +23,14 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.gang import BETask, RTTask
+from repro.core.rta import gang_wcet
 from repro.core.sim import (PairwiseInterference, SimResult, Simulator,
                             no_interference)
-from repro.vgang.formation import (VirtualGang, assign_priorities,
-                                   critical_member, rtg_sibling_budget)
-from repro.vgang.rta import schedulable_rtg_throttle, schedulable_vgangs
+from repro.vgang.formation import (Partitioning, VirtualGang,
+                                   assign_priorities, critical_member,
+                                   rtg_sibling_budget)
+from repro.vgang.rta import (schedulable_partitions,
+                             schedulable_rtg_throttle, schedulable_vgangs)
 
 
 def remap_members(vg: VirtualGang) -> List[RTTask]:
@@ -271,3 +274,88 @@ class VirtualGangPolicy:
             for m in vg.members:
                 out[m.name] = wcrt
         return out
+
+
+class StrictPartitionPolicy:
+    """Run a strict ``Partitioning`` (formation.strict_partition) on the
+    simulator engines — the runtime counterpart of
+    ``rta.schedulable_partitions``.
+
+    Dispatch model: RT-Gang's global one-gang-at-a-time lock is *off*
+    (``rt_gang_enabled=False`` — plain per-core preemptive fixed
+    priority). Each gang is widened to occupy its entire partition with
+    a uniform per-thread WCET of ``gang_wcet`` and a synchronous zero
+    release offset. Within a partition all gangs then share the same
+    core set with globally distinct RM priorities, so on every core of
+    the partition the highest-priority pending gang wins — the gangs of
+    one partition serialize exactly one-after-another, which is the
+    uniprocessor the partition RTA analyzes. The widened threads stay in
+    lockstep (identical WCET, release, priority on every core, and the
+    MemoryModel never slows a thread by its own gang's occupancy), so
+    widening adds no execution time: a gang's threads finish exactly
+    when its critical thread would.
+
+    Soundness of the RTA cross-check: at any instant the co-runners a
+    gang observes are a subset of the gangs of *other* partitions, so
+    the engines' occupancy slowdown never exceeds the cross-partition
+    inflation factor the analysis prices into C'.
+    """
+
+    def __init__(self, partitioning: Partitioning,
+                 interference: PairwiseInterference = no_interference,
+                 **unknown):
+        if unknown:
+            raise TypeError(
+                f"StrictPartitionPolicy: unknown option(s) "
+                f"{sorted(unknown)}; valid options: interference")
+        if getattr(interference, "distance_aware", False):
+            raise ValueError(
+                "StrictPartitionPolicy cannot dispatch a distance-aware "
+                "interference model: gangs are widened to their whole "
+                "partition, so runtime distances differ from the declared "
+                "member placements — price placement analytically via "
+                "rta.schedulable_partitions/pair_factor instead")
+        self.partitioning = partitioning
+        self.n_cores = partitioning.n_cores
+        self.interference = interference
+        self._members: List[RTTask] = []
+        for p in partitioning.partitions:
+            for g in p.gangs:
+                self._members.append(dataclasses.replace(
+                    g, cores=tuple(p.cores), release_offset=0.0,
+                    wcet=gang_wcet(g), wcet_per_core=None))
+
+    def taskset(self) -> List[RTTask]:
+        """Widened gangs: each pinned to its whole partition, distinct
+        global RM priorities — feed to Simulator."""
+        return list(self._members)
+
+    def build_simulator(self, be_tasks: Sequence[BETask] = (),
+                        interference: Optional[PairwiseInterference] = None,
+                        dt: Optional[float] = None,
+                        **kwargs) -> Simulator:
+        """Simulator over the widened gangs, RT-Gang lock disabled —
+        per-core preemptive FP is exactly partition-local uniprocessor
+        scheduling here (dt=None: exact event engine)."""
+        return Simulator(self.n_cores, self.taskset(), be_tasks=be_tasks,
+                         interference=interference or self.interference,
+                         rt_gang_enabled=False, dt=dt, **kwargs)
+
+    def simulate(self, horizon: float, **kwargs) -> SimResult:
+        return self.build_simulator(**kwargs).run(horizon)
+
+    def rta(self) -> Dict[str, Dict]:
+        """Partition RTA verdicts for this partitioning (vgang/rta.py)."""
+        return schedulable_partitions(self.partitioning, self.interference)
+
+    def member_bounds(self, interval: float = 1.0,
+                      blocking: float = 0.0) -> Dict[str, float]:
+        """Per-gang analytic response-time bounds from the partition RTA
+        — same contract as VirtualGangPolicy.member_bounds (the
+        ``interval`` argument is accepted for signature parity; strict
+        partitioning has no regulation windows)."""
+        del interval
+        verdicts = schedulable_partitions(self.partitioning,
+                                          self.interference,
+                                          blocking=blocking)
+        return {name: v["wcrt"] for name, v in verdicts.items()}

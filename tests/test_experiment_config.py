@@ -265,5 +265,5 @@ def test_grid_cell_payload_rejects_unknown_fields():
     from repro.vgang.grid import GridCell
     with pytest.raises(TypeError):
         GridCell(seed=0, n_cores=4, dist="mixed", util=0.8, n_sets=1,
-                 heuristics=("ffd",), rtg=False, rtg_dr=False,
+                 columns=("rtgang", "ffd"),
                  sim_check=0, gamma=0.5, cycles=20.0, bogus=1)

@@ -349,7 +349,7 @@ def test_executor_watchdog_aborts_hung_member():
 # ---------------------------------------------------------------------
 
 _CELL = GridCell(seed=0, n_cores=4, dist="uniform", util=0.5, n_sets=1,
-                 heuristics=("intfaware",), rtg=False, rtg_dr=False,
+                 columns=("rtgang", "intfaware"),
                  sim_check=0, gamma=2.0, cycles=20.0)
 
 

@@ -1,0 +1,267 @@
+"""Strict partitioning (vgang/formation.strict_partition + the
+partition-local RTA) and the PolicyFamily registry (vgang/family.py):
+single-partition collapse to core/rta.py bit-for-bit, batched==scalar
+verdicts, placement-aware pair_factor, event-engine soundness of the
+``part`` column, and byte-identity of the six legacy grid columns
+against the pre-refactor fixture."""
+import dataclasses
+import json
+import os
+import random
+
+import pytest
+
+from repro.core import rta as core_rta
+from repro.core.gang import RTTask
+from repro.core.memmodel import distance_interference
+from repro.core.rta import gang_wcet
+from repro.vgang.family import (BASELINE_COLUMN, FAMILIES, PART_COLUMN,
+                                RECLAIM_COLUMN, RTG_COLUMN, PolicyFamily,
+                                family_names, get_family, grid_columns,
+                                register_family)
+from repro.vgang.formation import (intensity_interference, pair_factor,
+                                   strict_partition)
+from repro.vgang.grid import GridCell, _grid_cell, random_vgang_taskset
+from repro.vgang.rta import (accepts_partitioned,
+                             batched_accepts_partitioned,
+                             schedulable_partitions)
+from repro.vgang.sched import StrictPartitionPolicy
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "grid_prerefactor_fixture.json")
+
+
+def _random_case(seed, n_cores=4, n_tasks=5, util=1.0, dist="mixed"):
+    rng = random.Random(seed)
+    tasks = random_vgang_taskset(rng, n_cores, n_tasks, util, dist)
+    return tasks, intensity_interference(tasks, 0.5)
+
+
+# ---------------------------------------------------------------------
+# strict_partition formation invariants
+# ---------------------------------------------------------------------
+
+def test_partitioning_is_disjoint_consecutive_and_complete():
+    for seed in range(8):
+        tasks, intf = _random_case(seed, n_cores=8, n_tasks=7, util=1.4)
+        pg = strict_partition(tasks, 8, intf)
+        names = [g.name for g in pg.gangs]
+        assert sorted(names) == sorted(t.name for t in tasks)
+        cursor = 0
+        for p in pg.partitions:
+            assert p.cores == tuple(range(cursor, cursor + p.size))
+            cursor += p.size
+            # every gang fits its partition
+            assert all(g.n_threads <= p.size for g in p.gangs)
+        assert cursor <= 8
+        # global RM priorities: distinct, shorter period -> higher prio
+        prios = {g.name: g.prio for g in pg.gangs}
+        assert len(set(prios.values())) == len(prios)
+        by_rm = sorted(pg.gangs, key=lambda g: (g.period, g.name))
+        assert [g.prio for g in by_rm] == sorted(
+            (g.prio for g in pg.gangs), reverse=True)
+
+
+def test_strict_partition_rejects_too_wide_gang():
+    t = RTTask("wide", wcet=1.0, period=10.0, cores=tuple(range(8)),
+               prio=1)
+    with pytest.raises(ValueError, match="wider"):
+        strict_partition([t], 4)
+
+
+# ---------------------------------------------------------------------
+# partition RTA: single-partition collapse + batched == scalar
+# ---------------------------------------------------------------------
+
+def test_single_partition_rta_equals_core_rta_bit_for_bit():
+    """A machine-wide first gang forces every later gang into the same
+    partition; with no co-running partition the inflation factor is
+    exactly 1.0 and the partition RTA must reproduce core/rta.py
+    bit-for-bit (C * 1.0 == C in IEEE floats)."""
+    for seed in range(6):
+        rng = random.Random(1000 + seed)
+        tasks = random_vgang_taskset(rng, 4, 5, 1.0, "mixed")
+        # widen the first gang to the full machine -> one partition
+        tasks[0] = dataclasses.replace(tasks[0], cores=tuple(range(4)))
+        intf = intensity_interference(tasks, 0.5)
+        pg = strict_partition(tasks, 4, intf)
+        assert len(pg.partitions) == 1
+        res = schedulable_partitions(pg, intf, blocking=0.5)
+        eq = [RTTask(name=g.name, wcet=gang_wcet(g), period=g.period,
+                     cores=(0,), prio=g.prio) for g in pg.gangs]
+        ref = core_rta.schedulable(eq, blocking=0.5)
+        assert set(res) == set(ref)
+        for n, v in ref.items():
+            assert res[n]["ok"] == v["ok"]
+            assert res[n]["wcrt"] == v["wcrt"]       # bitwise, no tol
+            assert res[n]["partition"] == "P0"
+
+
+def test_batched_partitioned_matches_scalar_over_many_tasksets():
+    """~300 random tasksets: the shard-batched partition verdict equals
+    the scalar loop exactly."""
+    pgs, intfs = [], []
+    for seed in range(300):
+        n_cores = (4, 8)[seed % 2]
+        dist = ("light", "mixed", "heavy")[seed % 3]
+        util = 0.5 + (seed % 7) * 0.25
+        tasks, intf = _random_case(seed, n_cores=n_cores, util=util,
+                                   dist=dist)
+        pgs.append(strict_partition(tasks, n_cores, intf))
+        intfs.append(intf)
+    scalar = [accepts_partitioned(pg, i) for pg, i in zip(pgs, intfs)]
+    batched = batched_accepts_partitioned(pgs, intfs)
+    assert batched == scalar
+    assert 0 < sum(scalar) < len(scalar)    # both verdicts exercised
+
+
+# ---------------------------------------------------------------------
+# placement-aware interference pricing
+# ---------------------------------------------------------------------
+
+def _near_far(victim, aggressor, dist):
+    return 3.0 if dist <= 1 else 1.5
+
+
+def test_pair_factor_location_free_is_plain_call():
+    tasks, intf = _random_case(0)
+    a, b = tasks[0].name, tasks[1].name
+    assert pair_factor(intf, a, b) == intf(a, b)
+    # placements are ignored for a location-free model
+    assert pair_factor(intf, a, b, (0,), (3,)) == intf(a, b)
+
+
+def test_pair_factor_distance_aware_prices_worst_core_pair():
+    intf = distance_interference(_near_far)
+    # adjacent blocks share a border pair at distance 1 -> 3.0
+    assert pair_factor(intf, "a", "b", (0, 1), (2, 3)) == 3.0
+    # separated blocks only see distant pairs -> 1.5
+    assert pair_factor(intf, "a", "b", (0,), (3,)) == 1.5
+    with pytest.raises(ValueError, match="placements"):
+        pair_factor(intf, "a", "b")
+
+
+def test_partition_rta_prices_distance_aware_cross_partition():
+    """Two single-gang partitions: the inflated WCET uses the worst
+    core-pair factor between the two blocks."""
+    t1 = RTTask("a", wcet=2.0, period=10.0, cores=(0, 1), prio=2)
+    t2 = RTTask("b", wcet=2.0, period=10.0, cores=(0, 1), prio=1)
+    pg = strict_partition([t1, t2], 4)
+    assert [p.cores for p in pg.partitions] == [(0, 1), (2, 3)]
+    intf = distance_interference(_near_far)
+    res = schedulable_partitions(pg, intf)
+    # blocks (0,1) vs (2,3) touch at distance 1 -> factor 3.0
+    assert res["a"]["wcrt"] == pytest.approx(6.0)
+    assert res["b"]["wcrt"] == pytest.approx(6.0)
+
+
+def test_strict_partition_policy_rejects_distance_aware_model():
+    tasks, _ = _random_case(0)
+    pg = strict_partition(tasks, 4)
+    with pytest.raises(ValueError, match="distance-aware"):
+        StrictPartitionPolicy(pg, distance_interference(_near_far))
+    with pytest.raises(TypeError, match="valid options"):
+        StrictPartitionPolicy(pg, reclam=True)
+
+
+# ---------------------------------------------------------------------
+# event-engine soundness of the part column
+# ---------------------------------------------------------------------
+
+def test_part_rta_accept_implies_simulated_missfree():
+    """RTA-accepted partitionings must simulate miss-free on the exact
+    event engine (the soundness direction the grid cross-checks)."""
+    fam = get_family(PART_COLUMN)
+    accepted = 0
+    for seed in range(12):
+        n_cores = (4, 8)[seed % 2]
+        tasks, intf = _random_case(seed, n_cores=n_cores,
+                                   util=0.8 + 0.1 * (seed % 4))
+        pg = fam.assign(fam.form(tasks, n_cores, intf))
+        if not fam.verdict(pg, intf):
+            continue
+        accepted += 1
+        policy = fam.make_policy(pg, n_cores, intf)
+        horizon = 20.0 * max(t.period for t in tasks)
+        r = policy.simulate(horizon, rta_bounds=policy.member_bounds(),
+                            trace=False)
+        assert sum(r.deadline_misses.values()) == 0, seed
+        # measured response never exceeds the analytic bound
+        assert all(m["negative"] == 0 for m in r.rta_margins.values())
+    assert accepted >= 3
+
+
+# ---------------------------------------------------------------------
+# PolicyFamily registry
+# ---------------------------------------------------------------------
+
+def test_registry_has_all_builtin_columns():
+    assert set(family_names()) >= {BASELINE_COLUMN, "ffd", "bestfit",
+                                   "intfaware", RTG_COLUMN,
+                                   RECLAIM_COLUMN, PART_COLUMN}
+    # the rtgT columns share the intfaware formation object key
+    assert get_family(RTG_COLUMN).form_key == "intfaware"
+    assert get_family(RECLAIM_COLUMN).form_key == "intfaware"
+    assert get_family(PART_COLUMN).kind == "partition"
+    assert get_family(PART_COLUMN).utilization is None
+
+
+def test_unknown_family_raises_with_known_names():
+    with pytest.raises(ValueError, match="unknown policy family"):
+        get_family("nope")
+    with pytest.raises(ValueError, match="rtgang"):
+        get_family("nope")
+
+
+def test_duplicate_registration_rejected():
+    fam = FAMILIES[BASELINE_COLUMN]
+    with pytest.raises(ValueError, match="already registered"):
+        register_family(fam)
+
+
+def test_grid_columns_canonical_order():
+    cols = grid_columns(("intfaware", "ffd", PART_COLUMN, RTG_COLUMN))
+    assert cols == (BASELINE_COLUMN, "intfaware", "ffd", RTG_COLUMN,
+                    PART_COLUMN)
+    # the baseline is not duplicated when requested explicitly
+    assert grid_columns((BASELINE_COLUMN, "ffd")) == (BASELINE_COLUMN,
+                                                      "ffd")
+    with pytest.raises(ValueError, match="unknown policy family"):
+        grid_columns(("ffd", "bogus"))
+
+
+def test_family_scalar_and_batched_verdicts_agree():
+    """Every registered family's batched verdict equals its scalar one
+    over a shared pool of random tasksets."""
+    cases = [_random_case(s, util=0.7 + 0.2 * (s % 4)) for s in range(8)]
+    for name in family_names():
+        fam = get_family(name)
+        formed = [fam.assign(fam.form(t, 4, i)) for t, i in cases]
+        intfs = [i for _, i in cases]
+        scalar = [bool(fam.verdict(v, i)) for v, i in zip(formed, intfs)]
+        batched = [bool(b) for b in
+                   fam.batched_verdict(formed, intfs, wcet_cache={})]
+        assert batched == scalar, name
+
+
+# ---------------------------------------------------------------------
+# refactor bit-identity: the six legacy grid columns
+# ---------------------------------------------------------------------
+
+def test_legacy_grid_columns_byte_identical_to_prerefactor_fixture():
+    """The registry refactor must not perturb the six pre-existing grid
+    columns: re-running the captured cells reproduces the fixture (rng
+    draw order, formation, verdicts, sim counters) byte for byte."""
+    columns = grid_columns(("ffd", "bestfit", "intfaware", RTG_COLUMN,
+                            RECLAIM_COLUMN))
+    rows = []
+    for util in (0.8, 1.1, 1.6):
+        cell = GridCell(seed=0, n_cores=4, dist="mixed", util=util,
+                        n_sets=10, columns=columns, sim_check=1,
+                        gamma=0.5, cycles=20.0)
+        row = _grid_cell(cell)
+        row.pop("wall_s"), row.pop("wall_rta_s")
+        rows.append(row)
+    got = json.dumps(rows, indent=1, sort_keys=True)
+    with open(FIXTURE) as f:
+        assert got == f.read()
